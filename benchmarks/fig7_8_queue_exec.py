@@ -1,0 +1,54 @@
+"""Paper Figs 7/8: queue time and execution time vs number of jobs,
+DIANA vs the FCFS/greedy/local baselines, on the paper's five-site test
+grid (site1: 4 nodes, site2–5: 5 nodes each).
+
+The paper's qualitative claims checked here: queue time grows with job
+count; DIANA's cost-based placement beats data-blind baselines on
+data-heavy analysis workloads.
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.sim import GridSim, bulk_burst, paper_grid_spec
+from .common import emit, timeit
+
+
+def _workload(n, seed=0):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i in range(n):
+        jobs.extend(bulk_burst(
+            user=f"u{i % 5}", n=1, at=float(i * 1.5),
+            work=30.0, input_bytes=4e9, output_bytes=2e8,
+            data_site=f"site{(i % 3) + 2}", origin_site="site1", rng=rng,
+        ))
+    return jobs
+
+
+def run() -> None:
+    for n in (25, 50, 100, 250, 500, 1000):
+        jobs = _workload(n)
+        rows = {}
+        for policy in ("diana", "fcfs", "greedy", "local"):
+            sim = GridSim(paper_grid_spec(), policy=policy)
+            res = sim.run(copy.deepcopy(jobs))
+            rows[policy] = res
+        d = rows["diana"]
+        emit(f"fig7_queue_time_n{n}", 0.0,
+             "queue_s=" + "/".join(f"{rows[p].avg_queue_time:.0f}"
+                                   for p in ("diana", "fcfs", "greedy", "local"))
+             + ";order=diana/fcfs/greedy/local")
+        emit(f"fig8_exec_time_n{n}", 0.0,
+             "exec_s=" + "/".join(f"{rows[p].avg_exec_time:.0f}"
+                                  for p in ("diana", "fcfs", "greedy", "local"))
+             + f";diana_turnaround_s={d.avg_turnaround:.0f}")
+    us = timeit(lambda: GridSim(paper_grid_spec(), policy="diana").run(
+        copy.deepcopy(_workload(100))), iters=3)
+    emit("fig7_sim_100jobs", us, "full_sim_wall_us")
+
+
+if __name__ == "__main__":
+    run()

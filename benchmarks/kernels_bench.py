@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks (CPU interpret timings are NOT TPU
+performance — reported for regression tracking; the structural facts
+that matter are the ref-match and the VMEM-tiled block shapes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.priority_requeue.ops import priority_requeue
+from repro.kernels.cost_matrix.ops import cost_matrix
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from .common import emit, timeit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    L = 65_536
+    n = rng.integers(1, 50, L).astype(np.float32)
+    q = rng.uniform(10, 5000, L).astype(np.float32)
+    t = rng.uniform(1, 64, L).astype(np.float32)
+
+    def prio():
+        pr, qi = priority_requeue(n, q, t, float(q.sum()), float(t.sum()),
+                                  use_kernel=False)
+        jax.block_until_ready(pr)
+
+    us = timeit(prio, iters=5)
+    emit("kernel_priority_requeue_ref_64k", us, f"jobs_per_s={L/(us/1e6):.3e}")
+
+    J, S = 4096, 256
+    args = [rng.uniform(1, 100, J).astype(np.float32) for _ in range(2)] + \
+           [rng.uniform(1, 100, S).astype(np.float32) for _ in range(7)] + \
+           [np.ones(S, np.float32)]
+
+    def cm():
+        c, b = cost_matrix(*args, use_kernel=False)
+        jax.block_until_ready(c)
+
+    us = timeit(cm, iters=5)
+    emit("kernel_cost_matrix_ref_4096x256", us,
+         f"pairs_per_s={J*S/(us/1e6):.3e}")
+
+    B, S_, H, KV, D = 1, 512, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qq = jax.random.normal(ks[0], (B, S_, H, D), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, S_, KV, D), jnp.float32)
+    vv = jax.random.normal(ks[2], (B, S_, KV, D), jnp.float32)
+    fa = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+
+    def fl():
+        jax.block_until_ready(fa(qq, kk, vv))
+
+    us = timeit(fl, iters=5)
+    flops = 4 * B * S_ * S_ * H * D
+    emit("kernel_flash_attention_ref_512", us, f"gflops_s={flops/(us/1e6)/1e9:.1f}")
+
+    qd = jax.random.normal(ks[0], (4, H, D), jnp.float32)
+    kd = jax.random.normal(ks[1], (4, 4096, KV, D), jnp.float32)
+    vd = jax.random.normal(ks[2], (4, 4096, KV, D), jnp.float32)
+    da = jax.jit(lambda a, b, c: decode_attention_ref(a, b, c, 4000))
+
+    def dec():
+        jax.block_until_ready(da(qd, kd, vd))
+
+    us = timeit(dec, iters=5)
+    emit("kernel_decode_attention_ref_4k", us,
+         f"cache_GBps={(kd.nbytes + vd.nbytes)/(us/1e6)/1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

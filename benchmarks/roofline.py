@@ -1,0 +1,58 @@
+"""§Roofline collector: turn the dry-run artifacts into the per-cell
+table (three terms in seconds, dominant bottleneck, MODEL_FLOPS ratio,
+roofline fraction) for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def rows(mesh: str = "single") -> list[dict]:
+    out = []
+    for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def run() -> None:
+    if not ARTIFACTS.exists():
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for mesh in ("single", "multi"):
+        for r in rows(mesh):
+            t = r["roofline_terms"]
+            emit(
+                f"roofline_{r['arch']}_{r['shape']}_{mesh}", 0.0,
+                f"compute_s={t['compute_s']:.4g};memory_s={t['memory_s']:.4g};"
+                f"collective_s={t['collective_s']:.4g};dom={r['dominant_term']};"
+                f"useful={r['useful_flops_ratio']:.3f};"
+                f"frac={r['roofline_fraction']:.4f};"
+                f"mem_gb={r['memory']['peak_per_device_gb']}",
+            )
+
+
+def markdown_table(mesh: str = "single") -> str:
+    """Full table for EXPERIMENTS.md."""
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "6ND/HLO | roofline frac | GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(mesh):
+        t = r["roofline_terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4g} | "
+            f"{t['memory_s']:.4g} | {t['collective_s']:.4g} | "
+            f"{r['dominant_term'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.4f} | "
+            f"{r['memory']['peak_per_device_gb']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Benchmark harness — one module per paper table/figure plus the
+roofline and kernel micro-benches. Prints ``name,us_per_call,derived``
+CSV rows (paper-expected values embedded in the derived field)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (cms_case_study, fig4_group_split, fig6_priority,
+                   fig7_8_queue_exec, fig9_11_migration, kernels_bench,
+                   roofline, serving_bench)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (fig4_group_split, fig6_priority, fig7_8_queue_exec,
+                fig9_11_migration, cms_case_study, roofline, kernels_bench,
+                serving_bench):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001 — report all benches
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fleet-level DIANA: schedule a bulk sweep of training jobs across
+TPU pods whose capacities come from the dry-run roofline artifacts,
+then exercise straggler mitigation (§IX) and pod failure (§VII C7).
+
+    PYTHONPATH=src python examples/grid_schedule.py
+"""
+from pathlib import Path
+
+from repro.grid import DianaGridRuntime, PodCapacity, WorkItem, capacity_from_roofline
+
+ART = Path("artifacts/dryrun")
+
+pods = []
+for i, name in enumerate(["pod-us-east", "pod-us-west", "pod-eu"]):
+    if ART.exists() and any(ART.glob("*.json")):
+        cap = capacity_from_roofline(name, ART, chips=256)
+    else:
+        cap = PodCapacity(name=name, chips=256)
+    cap.dcn_bandwidth_Bps = [25e9, 12e9, 6e9][i]   # heterogeneous DCN
+    pods.append(cap)
+
+grid = DianaGridRuntime(pods, quotas={"sweep": 100.0, "prod": 1000.0})
+
+# a 12-job hyperparameter sweep arrives as ONE bulk group (§VIII)
+sweep = [WorkItem(user="sweep", arch="gemma3-12b", shape="train_4k",
+                  steps=500, data_bytes=24e9, resident_pod="pod-us-east")
+         for _ in range(12)]
+placed = grid.schedule_bulk(sweep, division_factor=3)
+print("bulk sweep split across pods:")
+for pod, items in placed.items():
+    print(f"  {pod}: {len(items)} jobs "
+          f"(queued {grid.pods[pod].queued_seconds():.0f}s of work)")
+
+# a production fine-tune gets §V single placement
+prod = WorkItem(user="prod", arch="deepseek-v2-236b", shape="train_4k",
+                steps=100, data_bytes=470e9, resident_pod="pod-us-west")
+where = grid.schedule(prod)
+print(f"\nprod 236B job → {where} "
+      f"(cost={grid.placement_cost(prod, where):.1f}s incl. checkpoint move)")
+
+# pod-eu starts straggling at 40% speed → queued work migrates (§IX)
+grid.set_degraded("pod-eu", 0.4)
+moved = grid.mitigate_stragglers()
+print(f"\npod-eu degraded to 40% → migrated {len(moved)} queued jobs:",
+      {t: sum(1 for _, tt in moved if tt == t) for _, t in moved} or "none")
+
+# pod-us-west dies → its queue re-schedules, topology fails over (C7)
+orphans = grid.pod_failed("pod-us-west")
+print(f"pod-us-west failed → {len(orphans)} jobs rescheduled to "
+      f"{sorted({o.pod for o in orphans})}")
+print("healthy pods:", [n for n, h in grid.pods.items() if h.healthy])

@@ -1,0 +1,54 @@
+"""Bulk inference with DIANA queues: two tenants share one engine; a
+bulk burst from the low-quota tenant cannot starve the high-quota one
+(§X economy), and groups batch together (§VIII).
+
+    PYTHONPATH=src python examples/serve_bulk.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import LM
+from repro.serving import InferenceRequest, ServingEngine
+
+cfg = get_config("gemma2-9b", reduced=True).replace(num_layers=2, remat=False)
+lm = LM(cfg)
+params = lm.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+engine = ServingEngine(lm, params, num_slots=4, max_len=64,
+                       quotas={"batch-tenant": 10.0, "interactive": 1000.0})
+
+# the batch tenant dumps a 12-request bulk group...
+bulk = [InferenceRequest(user="batch-tenant",
+                         prompt=rng.integers(0, cfg.vocab_size, 8, np.int32)
+                         .astype(np.int32),
+                         max_new_tokens=8) for _ in range(12)]
+engine.submit_group(bulk, now=0.0)
+# ...then the interactive tenant asks for two completions
+vips = [InferenceRequest(user="interactive",
+                         prompt=rng.integers(0, cfg.vocab_size, 8, np.int32)
+                         .astype(np.int32),
+                         max_new_tokens=8) for _ in range(2)]
+for v in vips:
+    engine.submit(v, now=1.0)
+
+print("queue depth:", engine.queue_depth())
+bands = engine.queues.queue_contents()
+for i, band in enumerate(bands):
+    if band:
+        users = {}
+        for j in band:
+            users[j.user] = users.get(j.user, 0) + 1
+        print(f"  Q{i+1}: {users}")
+
+stats = engine.run_until_drained()
+vip_first = min(v.first_token_time for v in vips)
+bulk_first = sorted(b.first_token_time for b in bulk)
+print(f"\nserved={stats.served} in {stats.batches} batches "
+      f"({stats.decode_steps} decode steps)")
+print(f"interactive first-token at cycle {vip_first}; "
+      f"bulk first tokens at cycles {bulk_first[:4]}…{bulk_first[-1]}")
+print("interactive beat the bulk tail:", vip_first <= bulk_first[-1])
+for v in vips:
+    print("interactive output:", v.generated)

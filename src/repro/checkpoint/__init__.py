@@ -1,0 +1,4 @@
+"""Fault-tolerance substrate: sharded async checkpointing + elastic restore."""
+from .store import CheckpointManager, save_checkpoint, restore_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,96 @@
+"""Assigned input shapes × architectures: the 40-cell grid.
+
+  train_4k     seq 4096,   global_batch 256   (training     → train_step)
+  prefill_32k  seq 32768,  global_batch 32    (inference    → prefill_step)
+  decode_32k   seq 32768,  global_batch 128   (decode       → serve_step)
+  long_500k    seq 524288, global_batch 1     (long decode  → serve_step)
+
+long_500k runs only for sub-quadratic / mostly-local archs (see
+DESIGN.md §Arch-applicability); pure full-attention archs are N/A.
+``input_specs`` returns ShapeDtypeStructs only — no allocation; the
+modality frontends are stubs supplying precomputed embeddings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+__all__ = ["SHAPES", "Shape", "long_500k_applicable", "cells", "input_specs",
+           "WHISPER_DECODER_LEN"]
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+# sub-quadratic (SSM / hybrid) or mostly-local (sliding-window) archs
+_LONG_OK = {"mamba2-780m", "recurrentgemma-2b", "gemma3-12b", "gemma2-9b"}
+
+WHISPER_DECODER_LEN = 448  # whisper's max target length
+
+
+def long_500k_applicable(arch: str) -> bool:
+    return arch in _LONG_OK
+
+
+def cells(archs: list[str]) -> list[tuple[str, str, bool]]:
+    """All 40 (arch, shape, runnable) cells."""
+    out = []
+    for a in archs:
+        for s in SHAPES:
+            runnable = s != "long_500k" or long_500k_applicable(a)
+            out.append((a, s, runnable))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill → kwargs for loss/forward; decode → kwargs for
+    decode_step (cache specs are built separately via eval_shape).
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.compute_dtype)
+    d = cfg.d_model
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if cfg.family == "encdec":
+        # seq_len is the (stub) audio-frame length; decoder is short.
+        T = WHISPER_DECODER_LEN
+        if sh.kind == "train":
+            return {"tokens": tok(B, T), "labels": tok(B, T),
+                    "audio_embeds": jax.ShapeDtypeStruct((B, S, d), f)}
+        if sh.kind == "prefill":
+            return {"tokens": tok(B, T),
+                    "audio_embeds": jax.ShapeDtypeStruct((B, S, d), f)}
+        return {"tokens": tok(B, 1),
+                "audio_embeds": jax.ShapeDtypeStruct((B, S, d), f)}
+
+    extra = {}
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.ShapeDtypeStruct((B, cfg.num_image_tokens, d), f)
+
+    if sh.kind == "train":
+        return {"tokens": tok(B, S), "labels": tok(B, S), **extra}
+    if sh.kind == "prefill":
+        return {"tokens": tok(B, S), **extra}
+    return {"tokens": tok(B, 1), **extra}   # decode: cache built via eval_shape

@@ -1,0 +1,48 @@
+"""DIANA core: the paper's scheduling algorithms (§IV–§X).
+
+Public API re-exports.
+"""
+from .costs import (
+    CostWeights,
+    JobDemand,
+    NetworkLink,
+    SiteState,
+    computation_cost,
+    data_transfer_cost,
+    mathis_throughput,
+    network_cost,
+    total_cost,
+    total_cost_matrix,
+)
+from . import priority  # submodule: priority.priority / priority.threshold …
+from .priority import (
+    NUM_QUEUES,
+    queue_index,
+    reprioritize,
+    threshold,
+)
+from .queues import Job, MultilevelFeedbackQueues, is_congested
+from .scheduler import DianaScheduler, JobClass, SiteDecision, classify
+from .bulk import (
+    BulkGroup,
+    BulkScheduler,
+    GroupPlacement,
+    allocate_proportional,
+    average_makespan,
+)
+from .migration import MigrationDecision, PeerView, migrate_congested, select_peer
+from .topology import GridTopology, Node, RootGrid, SubGrid
+
+__all__ = [
+    "CostWeights", "JobDemand", "NetworkLink", "SiteState",
+    "computation_cost", "data_transfer_cost", "mathis_throughput",
+    "network_cost", "total_cost", "total_cost_matrix",
+    "NUM_QUEUES", "priority", "queue_index", "reprioritize", "threshold",
+    # note: "priority" is the submodule (repro.core.priority), not the fn
+    "Job", "MultilevelFeedbackQueues", "is_congested",
+    "DianaScheduler", "JobClass", "SiteDecision", "classify",
+    "BulkGroup", "BulkScheduler", "GroupPlacement",
+    "allocate_proportional", "average_makespan",
+    "MigrationDecision", "PeerView", "migrate_congested", "select_peer",
+    "GridTopology", "Node", "RootGrid", "SubGrid",
+]

@@ -1,0 +1,103 @@
+"""Job migration between peers (paper §IX).
+
+Peer-selection criteria: minimum queue length and minimum cost to place
+the job remotely. The scheduler polls peers for (queue length, total
+cost, jobsAhead) where jobsAhead counts queued jobs with priority ≥ the
+candidate job's priority. If the best peer's jobsAhead beats the local
+value, the job's priority is bumped and it migrates — once. A migrated
+job is pinned ("the site at which it arrives will not attempt to
+schedule it again"), which prevents cycling. Only low-priority (Q4)
+jobs migrate under congestion (§X).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from .queues import Job, MultilevelFeedbackQueues, is_congested
+
+__all__ = ["PeerView", "MigrationDecision", "select_peer", "migrate_congested"]
+
+
+@dataclass(frozen=True)
+class PeerView:
+    """What a peer reports when polled (§IX)."""
+
+    name: str
+    queue_length: int
+    jobs_ahead: int
+    total_cost: float          # §IV cost of placing the job there
+    alive: bool = True
+
+
+@dataclass
+class MigrationDecision:
+    migrate: bool
+    target: Optional[str] = None
+    reason: str = ""
+
+
+def select_peer(
+    job: Job,
+    local_name: str,
+    local_jobs_ahead: int,
+    local_cost: float,
+    peers: list[PeerView],
+) -> MigrationDecision:
+    """§IX algorithm: find the peer with min jobsAhead, tie-broken by
+    min cost; migrate only if it strictly beats the local site."""
+    if job.migrated:
+        return MigrationDecision(False, reason="pinned: already migrated once")
+    alive = [p for p in peers if p.alive and p.name != local_name]
+    if not alive:
+        return MigrationDecision(False, reason="no alive peers")
+    best = min(alive, key=lambda p: (p.jobs_ahead, p.total_cost))
+    if best.jobs_ahead < local_jobs_ahead and best.total_cost <= local_cost:
+        return MigrationDecision(True, target=best.name, reason="peer has fewer jobs ahead at lower cost")
+    if best.jobs_ahead < local_jobs_ahead and best.total_cost < float("inf"):
+        # Paper's primary criterion is jobsAhead; cost is the tiebreaker,
+        # but a congested local site still prefers the shorter queue.
+        return MigrationDecision(True, target=best.name, reason="peer has fewer jobs ahead")
+    return MigrationDecision(False, reason="local site is no worse")
+
+
+def apply_migration(job: Job, decision: MigrationDecision, priority_bump: float = 0.1) -> Job:
+    """§IX: 'increase the job's priority, migrate the job to that site'."""
+    if not decision.migrate or decision.target is None:
+        return job
+    job.priority = min(1.0, job.priority + priority_bump)
+    job.migrated = True
+    job.site = decision.target
+    return job
+
+
+def migrate_congested(
+    queues: MultilevelFeedbackQueues,
+    local_name: str,
+    poll_peers: Callable[[Job], list[PeerView]],
+    local_cost: Callable[[Job], float],
+    window: float,
+    now: float,
+    max_moves: Optional[int] = None,
+) -> list[tuple[Job, str]]:
+    """§X congestion response: while the arrival/service imbalance
+    exceeds Thrs, push low-priority (Q4) jobs to better peers."""
+    moved: list[tuple[Job, str]] = []
+    if not queues.congested(window, now):
+        return moved
+    for job in list(queues.low_priority_jobs()):
+        if max_moves is not None and len(moved) >= max_moves:
+            break
+        peers = poll_peers(job)
+        decision = select_peer(
+            job,
+            local_name,
+            queues.jobs_ahead(job.priority),
+            local_cost(job),
+            peers,
+        )
+        if decision.migrate and decision.target is not None:
+            queues.remove(job)
+            apply_migration(job, decision)
+            moved.append((job, decision.target))
+    return moved

@@ -1,0 +1,148 @@
+"""P2P meta-scheduler topology (paper §IX, Fig 5).
+
+Nodes are grouped into SubGrids; each site has one RootGrid (the master
+node) and one or more SubGrids. Meta-schedulers live at RootGrids and
+talk RootGrid↔RootGrid (P2P) — never all-to-all at node level. Each
+RootGrid keeps a real-time table of its SubGrid nodes and replicates it
+to a standby node, which promotes itself if the RootGrid crashes.
+
+Join protocol: the first peer creates the RootGrid; later peers join
+the nearest SubGrid (or create their own if they bring a whole site).
+This module is the control-plane analogue used by ``repro.grid`` for
+pod membership / coordinator failover.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+__all__ = ["Node", "SubGrid", "RootGrid", "GridTopology"]
+
+_uid = itertools.count(1)
+
+
+@dataclass
+class Node:
+    name: str
+    capacity: float = 1.0
+    availability: float = 1.0        # §IX: root should maximize availability
+    alive: bool = True
+    uid: int = field(default_factory=lambda: next(_uid))
+
+
+@dataclass
+class SubGrid:
+    name: str
+    nodes: dict[str, Node] = field(default_factory=dict)
+
+    def add(self, node: Node) -> None:
+        self.nodes[node.name] = node
+
+    def remove(self, name: str) -> Optional[Node]:
+        return self.nodes.pop(name, None)
+
+    @property
+    def capacity(self) -> float:
+        return sum(n.capacity for n in self.nodes.values() if n.alive)
+
+
+@dataclass
+class RootGrid:
+    """Master node of a site; hosts the meta-scheduler (§IX)."""
+
+    site: str
+    master: Node
+    subgrids: dict[str, SubGrid] = field(default_factory=dict)
+    standby: Optional[Node] = None
+    # The replicated real-time node table (master → standby).
+    node_table: dict[str, bool] = field(default_factory=dict)
+
+    def register(self, subgrid: SubGrid) -> None:
+        self.subgrids[subgrid.name] = subgrid
+        self._sync_table()
+
+    def _sync_table(self) -> None:
+        self.node_table = {
+            n.name: n.alive
+            for sg in self.subgrids.values()
+            for n in sg.nodes.values()
+        }
+
+    def node_joined(self, subgrid_name: str, node: Node) -> None:
+        self.subgrids[subgrid_name].add(node)
+        self._sync_table()
+        self._elect_standby()
+
+    def node_left(self, subgrid_name: str, name: str) -> None:
+        self.subgrids[subgrid_name].remove(name)
+        self._sync_table()
+        self._elect_standby()
+
+    def _elect_standby(self) -> None:
+        """Standby = highest-availability node that isn't the master."""
+        candidates = [
+            n
+            for sg in self.subgrids.values()
+            for n in sg.nodes.values()
+            if n.alive and n.name != self.master.name
+        ]
+        self.standby = max(candidates, key=lambda n: (n.availability, -n.uid), default=None)
+
+    def fail_master(self) -> bool:
+        """§IX: standby takes over with the replicated table."""
+        self.master.alive = False
+        if self.standby is None:
+            return False
+        self.master = self.standby
+        self._elect_standby()
+        self._sync_table()
+        return True
+
+
+class GridTopology:
+    """The VO-wide view: RootGrids discoverable P2P (Fig 5)."""
+
+    def __init__(self) -> None:
+        self.rootgrids: dict[str, RootGrid] = {}
+
+    def join(self, site: str, node: Node, nearest: Optional[str] = None) -> RootGrid:
+        """§IX join protocol.
+
+        If the site has no RootGrid yet, this peer creates it (and its
+        first SubGrid). Small sites may instead join an existing
+        SubGrid at ``nearest``.
+        """
+        if nearest is not None and nearest in self.rootgrids:
+            root = self.rootgrids[nearest]
+            sg = next(iter(root.subgrids.values()))
+            root.node_joined(sg.name, node)
+            return root
+        if site not in self.rootgrids:
+            root = RootGrid(site=site, master=node)
+            sg = SubGrid(name=f"{site}/sg0")
+            sg.add(node)
+            root.register(sg)
+            root._elect_standby()
+            self.rootgrids[site] = root
+            return root
+        root = self.rootgrids[site]
+        sg = next(iter(root.subgrids.values()))
+        root.node_joined(sg.name, node)
+        return root
+
+    def leave(self, site: str, name: str) -> None:
+        root = self.rootgrids.get(site)
+        if root is None:
+            return
+        for sg in root.subgrids.values():
+            if name in sg.nodes:
+                root.node_left(sg.name, name)
+                return
+
+    def peers(self, site: str) -> list[str]:
+        """RootGrid↔RootGrid peer list (excludes self)."""
+        return [s for s in self.rootgrids if s != site]
+
+    def fail_site_master(self, site: str) -> bool:
+        return self.rootgrids[site].fail_master()

@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic sharded token streams with prefetch."""
+from .pipeline import SyntheticLMDataset, ShardedLoader, make_train_batches
+
+__all__ = ["SyntheticLMDataset", "ShardedLoader", "make_train_batches"]

@@ -1,0 +1,8 @@
+"""Grid binding: DIANA scheduling over a fleet of TPU pods."""
+from .capacity import PodCapacity, capacity_from_artifact, capacity_from_roofline
+from .runtime import DianaGridRuntime, PodHandle, WorkItem
+
+__all__ = [
+    "PodCapacity", "capacity_from_artifact", "capacity_from_roofline",
+    "DianaGridRuntime", "PodHandle", "WorkItem",
+]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: §IV total-cost matrix over (jobs × sites).
+
+DIANA evaluates Network + Computation + DTC for every queued job
+against every peer site on each scheduling pass — at bulk scale that is
+a (10⁴..10⁶ jobs) × (10²..10³ sites) elementwise grid. Jobs tile the
+sublane axis, sites the 128-lane axis; site state rides as (1, S_blk)
+rows broadcast down the tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+JOB_BLOCK = 256
+SITE_BLOCK = 128
+
+
+def _kernel(jb_ref, jw_ref, site_ref, out_ref, *, w_queue, w_work, w_load, mss):
+    jb = jb_ref[...]                       # (JB, 1)
+    jw = jw_ref[...]
+    # site rows: cap, queue, work, load, bw, loss, rtt, alive — (8, SB)
+    cap = site_ref[0:1, :]
+    queue = site_ref[1:2, :]
+    work = site_ref[2:3, :]
+    load = site_ref[3:4, :]
+    bw = site_ref[4:5, :]
+    loss = site_ref[5:6, :]
+    rtt = site_ref[6:7, :]
+    alive = site_ref[7:8, :]
+    mathis = mss / (rtt * jnp.sqrt(jnp.maximum(loss, 1e-12)))
+    eff_bw = jnp.where(loss > 0.0, jnp.minimum(bw, mathis), bw)
+    net = (loss / bw) * 1e6
+    comp = (w_queue * queue + w_work * work) / cap + w_load * load + jw / cap
+    dtc = jb / eff_bw
+    cost = net + comp + dtc
+    out_ref[...] = jnp.where(alive > 0.5, cost, jnp.float32(3.0e38))
+
+
+def cost_matrix_pallas(
+    job_bytes, job_work,          # (J, 1) f32, J % JOB_BLOCK == 0
+    site_rows,                    # (8, S) f32, S % SITE_BLOCK == 0
+    *, w_queue=1.0, w_work=1.0, w_load=1.0, mss=1460.0, interpret=False,
+):
+    J = job_bytes.shape[0]
+    S = site_rows.shape[1]
+    grid = (J // JOB_BLOCK, S // SITE_BLOCK)
+    kern = functools.partial(
+        _kernel, w_queue=w_queue, w_work=w_work, w_load=w_load, mss=mss)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((JOB_BLOCK, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((JOB_BLOCK, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((8, SITE_BLOCK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((JOB_BLOCK, SITE_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((J, S), jnp.float32),
+        interpret=interpret,
+    )(job_bytes, job_work, site_rows)

@@ -1,0 +1,44 @@
+"""jit'd wrapper: pads jobs/sites to tile multiples, packs site state
+into the (8, S) row layout, runs kernel or oracle, adds the argmin."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .cost_matrix import JOB_BLOCK, SITE_BLOCK, cost_matrix_pallas
+from .ref import cost_matrix_ref
+
+
+def _pad(x, m, value=1.0):
+    L = x.shape[0]
+    pad = (-L) % m
+    return jnp.pad(x, (0, pad), constant_values=value), L
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def cost_matrix(
+    job_bytes, job_work, cap, queue, work, load, bw, loss, rtt, alive,
+    *, use_kernel=None, interpret=True,
+):
+    """§IV cost over (J, S) + per-job best site. Returns (cost, best)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return cost_matrix_ref(job_bytes, job_work, cap, queue, work, load,
+                               bw, loss, rtt, alive)
+    jb, J = _pad(jnp.asarray(job_bytes, jnp.float32), JOB_BLOCK)
+    jw, _ = _pad(jnp.asarray(job_work, jnp.float32), JOB_BLOCK)
+    packed = []
+    for arr, fill in ((cap, 1.0), (queue, 0.0), (work, 0.0), (load, 0.0),
+                      (bw, 1.0), (loss, 0.0), (rtt, 1.0),
+                      (jnp.asarray(alive, jnp.float32), 0.0)):
+        p, S = _pad(jnp.asarray(arr, jnp.float32), SITE_BLOCK, fill)
+        packed.append(p)
+    site_rows = jnp.stack(packed, axis=0)          # (8, S_pad)
+    cost = cost_matrix_pallas(
+        jb[:, None], jw[:, None], site_rows,
+        interpret=(interpret and jax.default_backend() != "tpu"),
+    )[:J, :S]
+    return cost, jnp.argmin(cost, axis=1).astype(jnp.int32)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the cost_matrix kernel (paper §IV/§V).
+
+Same semantics as ``repro.core.costs.total_cost_matrix`` (including the
+Mathis TCP cap) plus the per-job argmin site selection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cost_matrix_ref(
+    job_bytes, job_work,                  # (J,)
+    cap, queue, work, load, bw, loss, rtt, alive,   # (S,)
+    w_queue=1.0, w_work=1.0, w_load=1.0, mss=1460.0,
+):
+    """Returns (cost (J,S) f32, best_site (J,) i32)."""
+    jb = jnp.asarray(job_bytes, jnp.float32)[:, None]
+    jw = jnp.asarray(job_work, jnp.float32)[:, None]
+    cap = jnp.asarray(cap, jnp.float32)[None, :]
+    loss = jnp.asarray(loss, jnp.float32)
+    bw = jnp.asarray(bw, jnp.float32)
+    rtt = jnp.asarray(rtt, jnp.float32)
+    mathis = mss / (rtt * jnp.sqrt(jnp.maximum(loss, 1e-12)))
+    eff_bw = jnp.where(loss > 0.0, jnp.minimum(bw, mathis), bw)
+    net = (loss / bw)[None, :] * 1e6
+    comp = (
+        (w_queue * jnp.asarray(queue, jnp.float32)
+         + w_work * jnp.asarray(work, jnp.float32))[None, :] / cap
+        + w_load * jnp.asarray(load, jnp.float32)[None, :]
+        + jw / cap
+    )
+    dtc = jb / eff_bw[None, :]
+    cost = net + comp + dtc
+    big = jnp.float32(3.0e38)
+    cost = jnp.where(jnp.asarray(alive, bool)[None, :], cost, big)
+    return cost, jnp.argmin(cost, axis=1).astype(jnp.int32)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: single-token GQA decode attention.
+
+Decode is memory-bound: the whole KV cache streams HBM→VMEM once per
+step. The kernel tiles the cache sequence into (blk_s, D) blocks on a
+(B, KV, s_blocks) grid, keeps the online-softmax state for the *group*
+of H//KV query heads in VMEM scratch (so each KV block is read once
+and shared by the whole group — the GQA arithmetic-intensity win), and
+masks by absolute position (pos, window) with block-local iota.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+BLK_S = 512
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, window, softcap, blk_s):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+    pos = pos_ref[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                        # (rep, D) — the GQA head group
+    k = k_ref[0, 0]                        # (blk_s, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                              # (rep, blk_s)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kp = si * blk_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kp <= pos
+    if window > 0:
+        valid = valid & ((pos - kp) < window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, pos, *, window=0, softcap=0.0,
+                            blk_s=BLK_S, interpret=False):
+    """q: (B, KV, rep, D); k, v: (B, KV, S, D); pos scalar i32
+    → (B, KV, rep, D)."""
+    B, KV, rep, D = q.shape
+    S = k.shape[2]
+    blk_s = min(blk_s, S)
+    assert S % blk_s == 0
+    grid = (B, KV, S // blk_s)
+    kern = functools.partial(
+        _kernel, scale=D ** -0.5, window=window, softcap=softcap, blk_s=blk_s)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, rep, D), lambda b, g, s: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, blk_s, D), lambda b, g, s: (b, g, s, 0)),
+            pl.BlockSpec((1, 1, blk_s, D), lambda b, g, s: (b, g, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, D), lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)

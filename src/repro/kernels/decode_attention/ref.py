@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for decode_attention: one query token against a
+length-S KV cache with position masking (+ optional window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(q, k, v, pos, *, window=0, softcap=0.0):
+    """q: (B, H, D); k, v: (B, S, KV, D); pos scalar → (B, H, D)."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k).astype(jnp.float32) * (D ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    idx = jnp.arange(S)[None, None, :]
+    valid = idx <= pos
+    if window > 0:
+        valid = valid & ((pos - idx) < window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhk,bkhd->bhd", p, v)

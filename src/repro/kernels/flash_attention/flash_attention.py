@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blocked flash attention (forward).
+
+Grid (B, H, q_blocks, kv_blocks) with the kv axis innermost; the
+online-softmax running state (m, l, acc) lives in VMEM scratch and
+persists across the innermost grid dimension. Q/K/V blocks are tiled
+(blk, D) in VMEM; the MXU sees (blk_q, D)·(D, blk_k) matmuls with
+D ∈ {64, 128, 256} — all 128-lane aligned. GQA folds by indexing the
+kv head as h // (H // KV) in the BlockSpec index map. Causal and
+sliding-window masks are block-local iota comparisons; fully-masked
+blocks still stream (documented trade-off — skipping them needs a
+data-dependent grid, revisited in §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+BLK_Q = 512
+BLK_K = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, causal, window, softcap, blk_q, blk_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                       # (blk_q, D)
+    k = k_ref[0, 0]                       # (blk_k, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                             # (blk_q, blk_k)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    kp = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window > 0:
+        mask = mask & ((qp - kp) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q, k, v, *, causal=True, window=0, softcap=0.0,
+    blk_q=BLK_Q, blk_k=BLK_K, interpret=False,
+):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D) → (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0
+    grid = (B, H, Sq // blk_q, Sk // blk_k)
+    kern = functools.partial(
+        _kernel, scale=D ** -0.5, causal=causal, window=window,
+        softcap=softcap, blk_q=blk_q, blk_k=blk_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""jit'd wrapper around the flash_attention kernel.
+
+Layout: models use (B, S, H, D); the kernel wants (B, H, S, D). On CPU
+the jnp oracle runs instead (the chunked path in
+``repro.models.attention`` is the production CPU/compile fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "use_kernel", "interpret"),
+)
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    use_kernel=None, interpret=True):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) → (B, Sq, H, D)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=window, softcap=softcap,
+        interpret=(interpret and jax.default_backend() != "tpu"),
+    )
+    return out.transpose(0, 2, 1, 3)

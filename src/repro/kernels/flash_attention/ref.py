@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash_attention: full-score softmax attention
+with causal / sliding-window masks, GQA and logit soft-capping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) → (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (D ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window > 0:
+        m = m & ((qp - kp) < window)
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

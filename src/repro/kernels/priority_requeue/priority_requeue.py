@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: §X re-prioritization of every queued job.
+
+At CMS scale (queues of 10⁴–10⁷ jobs, re-run on *every* arrival) this
+is DIANA's hot loop. The computation is elementwise over jobs, so the
+kernel tiles jobs into lane-aligned (8, 128) VMEM blocks; the two
+quota/processor totals ride in SMEM as (1, 1) scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_ROWS = 64          # rows of 128 lanes per grid step → 8192 jobs/block
+
+
+def _kernel(scalars_ref, n_ref, q_ref, t_ref, pr_ref, qidx_ref):
+    quota_sum = scalars_ref[0, 0]
+    proc_sum = scalars_ref[0, 1]
+    n = n_ref[...]
+    q = q_ref[...]
+    t = t_ref[...]
+    N = (q * proc_sum) / (quota_sum * t)
+    pr = jnp.where(n <= N, (N - n) / N, (N - n) / n)
+    pr_ref[...] = pr
+    qidx_ref[...] = (
+        (pr < 0.5).astype(jnp.int32)
+        + (pr < 0.0).astype(jnp.int32)
+        + (pr < -0.5).astype(jnp.int32)
+    )
+
+
+def priority_requeue_pallas(n, q, t, quota_sum, proc_sum, *, interpret: bool = False):
+    """n, q, t: (M, 128) f32 (lane-padded by ops.py) → (pr, qidx)."""
+    M = n.shape[0]
+    rows = min(BLOCK_ROWS, M)
+    assert M % rows == 0, (M, rows)
+    scalars = jnp.array([[quota_sum, proc_sum]], jnp.float32)
+    grid = (M // rows,)
+    blk = pl.BlockSpec((rows, 128), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            blk, blk, blk,
+        ],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 128), jnp.float32),
+            jax.ShapeDtypeStruct((M, 128), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scalars, n, q, t)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the priority_requeue kernel (paper §X).
+
+Identical math to ``repro.core.priority.reprioritize``; kept standalone
+so the kernel package is self-contained."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def priority_requeue_ref(n, q, t, quota_sum, proc_sum):
+    """n, q, t: (L,) f32; scalars Q, T → (priorities (L,) f32, queue idx (L,) i32)."""
+    n = jnp.asarray(n, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    t = jnp.asarray(t, jnp.float32)
+    N = (q * proc_sum) / (quota_sum * t)
+    pr = jnp.where(n <= N, (N - n) / N, (N - n) / n)
+    qidx = (
+        (pr < 0.5).astype(jnp.int32)
+        + (pr < 0.0).astype(jnp.int32)
+        + (pr < -0.5).astype(jnp.int32)
+    )
+    return pr, qidx

@@ -1,0 +1,356 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax-touching import: jax locks the device count at
+# first init. setdefault lets test harnesses pre-set a smaller count.
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture × input
+shape × mesh) cell, prove the sharding is coherent, and extract the
+roofline terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+
+Per cell the artifact JSON records memory_analysis (per-device bytes),
+cost_analysis (HLO FLOPs/bytes), the collective schedule parsed from
+the compiled HLO, MODEL_FLOPS = 6·N·D (2·N·D for inference), and the
+three roofline terms vs TPU v5e peaks.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import SHAPES, cells, input_specs
+from repro.models import LM
+from repro.runtime import sharding as shlib
+from repro.runtime.pspec import logical_axis_rules
+from repro.runtime.serve import abstract_cache, build_serve_step
+from repro.runtime.train import TrainConfig, abstract_train_state, build_train_step, build_prefill_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+
+# ---- TPU v5e hardware constants (per chip) ----
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# activation budget steering the automatic microbatch count
+_CARRY_BUDGET = 4 * 2**30  # per-device live scan-carry bytes
+
+
+def auto_microbatches(cfg, sh, mesh) -> int:
+    """Grad-accumulation factor so the layer-scan residual carries
+    (L × B/dev × S × d × 2B) stay under the per-device budget."""
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    S = sh.seq_len if cfg.family != "encdec" else 448
+    per_dev_B = max(sh.global_batch // data, 1)
+    layers = cfg.num_layers + cfg.num_encoder_layers
+    carry = layers * per_dev_B * S * cfg.d_model * 2
+    mb = 1
+    while (carry / mb > _CARRY_BUDGET
+           and mb * 2 <= sh.global_batch
+           and (sh.global_batch // (mb * 2)) % max(data, 1) == 0):
+        mb *= 2
+    return mb
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device collective traffic from the compiled HLO.
+
+    Bytes-on-wire factors (ring algorithms, group size g):
+      all-reduce 2(g−1)/g · |out|; all-gather (g−1)/g · |out|;
+      reduce-scatter (g−1) · |out|; all-to-all (g−1)/g · |out|;
+      collective-permute |out|.
+    """
+    by_op: dict[str, dict] = {}
+    top: list[tuple[float, str]] = []
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, shape_s, op = m.groups()
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        elems = 1
+        if shape_s:
+            for d in shape_s.split(","):
+                if d:
+                    elems *= int(d)
+        size = elems * _DTYPE_BYTES.get(dtype, 4)
+        g = 1
+        gm = _GROUP_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        factor = {
+            "all-reduce": 2.0 * (g - 1) / max(g, 1),
+            "all-gather": (g - 1) / max(g, 1),
+            "reduce-scatter": float(g - 1),
+            "all-to-all": (g - 1) / max(g, 1),
+            "collective-permute": 1.0,
+        }[op]
+        bytes_moved = size * factor
+        rec = by_op.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += bytes_moved
+        total += bytes_moved
+        top.append((bytes_moved, f"{op} {dtype}[{shape_s}] g={g}"))
+    top.sort(reverse=True)
+    return {"total_bytes": total, "by_op": by_op,
+            "top": [f"{b/2**20:.1f}MiB {d}" for b, d in top[:10]]}
+
+
+def count_params(abstract_params, cfg) -> tuple[float, float]:
+    """(total, active) param counts; active discounts unrouted experts."""
+    total = active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(abstract_params)[0]:
+        n = 1.0
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if cfg.num_experts and any("w_gate" == k or "w_up" == k or "w_down" == k
+                                   for k in keys) and "moe" in keys:
+            # routed experts: only top_k of num_experts fire per token
+            active += n * cfg.top_k / cfg.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def _make_mesh(mesh_arg: str):
+    if mesh_arg == "single":
+        return make_production_mesh(multi_pod=False)
+    if mesh_arg == "multi":
+        return make_production_mesh(multi_pod=True)
+    dims = tuple(int(x) for x in mesh_arg.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    return jax.make_mesh(dims, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+
+
+def run_cell(arch: str, shape_name: str, mesh_arg: str, *,
+             reduced: bool = False, microbatches: int | None = None,
+             remat_policy: str | None = None,
+             optimizer: str = "adamw",
+             compress_pod_grads: bool = False) -> dict:
+    cfg = get_config(arch, reduced=reduced)
+    if remat_policy:
+        cfg = cfg.replace(remat_policy=remat_policy)
+    sh = SHAPES[shape_name]
+    if reduced:
+        # shrink shapes proportionally for CI smoke of the dry-run path
+        sh = type(sh)(sh.name, min(sh.seq_len, 256),
+                      max(4, sh.global_batch // 32), sh.kind)
+    lm = LM(cfg)
+    mesh = _make_mesh(mesh_arg)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    with mesh, logical_axis_rules(mesh):
+        if sh.kind == "train":
+            mb = microbatches if microbatches is not None else auto_microbatches(cfg, sh, mesh)
+            tcfg = TrainConfig(microbatches=mb, optimizer=optimizer,
+                               compress_pod_grads=compress_pod_grads)
+            step, _, _ = build_train_step(lm, mesh, tcfg)
+            params_abs, opt_abs = abstract_train_state(lm, optimizer=optimizer)
+            pspecs = shlib.param_specs(mesh, params_abs)
+            params_sh = shlib.named(mesh, pspecs)
+            if optimizer == "adamw8":
+                opt_sh = shlib.named(mesh, shlib.opt8_specs(mesh, opt_abs, pspecs))
+            else:
+                opt_sh = shlib.named(mesh, shlib.opt_specs(mesh, opt_abs, pspecs))
+            batch_abs = _shape_batch(cfg, sh, lm)
+            batch_sh = shlib.named(mesh, shlib.batch_specs(
+                mesh, batch_abs, pod_manual=compress_pod_grads))
+            jitted = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+            tokens = sh.global_batch * (sh.seq_len if cfg.family != "encdec" else 448)
+            flops_mult = 6.0
+        elif sh.kind == "prefill":
+            step, params_sh = build_prefill_step(lm, mesh)
+            params_abs = lm.abstract_params()
+            batch_abs = _shape_batch(cfg, sh, lm, labels=False)
+            batch_sh = shlib.named(mesh, shlib.batch_specs(mesh, batch_abs))
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+            tokens = sh.global_batch * (sh.seq_len if cfg.family != "encdec" else 448)
+            flops_mult = 2.0
+        else:  # decode
+            B = sh.global_batch
+            step, (params_sh, cache_sh, tok_sh, pos_sh), cache_abs = \
+                build_serve_step(lm, mesh, B, sh.seq_len)
+            params_abs = lm.abstract_params()
+            tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+                             out_shardings=(None, cache_sh), donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, tok_abs, pos_abs)
+            tokens = B
+            flops_mult = 2.0
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    xla_raw = compiled.cost_analysis() or {}
+    acc = analyze_hlo(compiled.as_text())   # trip-count-aware (see module doc)
+    colls = {
+        "total_bytes": acc.collective_bytes,
+        "by_op": acc.by_coll,
+        "top": [f"{b/2**20:.1f}MiB {d}" for b, d in acc.top_colls],
+    }
+    top_hbm = [f"{b/2**30:.2f}GiB {d}" for b, d in acc.top_hbm]
+    total_p, active_p = count_params(lm.abstract_params(), cfg)
+
+    hlo_flops = acc.flops
+    hlo_bytes = acc.hbm_bytes
+    model_flops = flops_mult * active_p * tokens
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = colls["total_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    # memory term if score-shaped traffic stays in VMEM (flash kernel)
+    memory_s_kernelized = (hlo_bytes - acc.score_hbm_bytes) / HBM_BW
+    dominant = max(terms, key=terms.get)
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_arg,
+        "kind": sh.kind, "n_devices": n_dev, "reduced": reduced,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30, 3),
+        },
+        "cost": {
+            "hlo_flops": hlo_flops, "hlo_bytes": hlo_bytes,
+            "xla_raw_flops": float(xla_raw.get("flops", 0.0)),
+            "xla_raw_bytes": float(xla_raw.get("bytes accessed", 0.0)),
+        },
+        "collectives": colls,
+        "top_hbm_ops": top_hbm,
+        "params": {"total": total_p, "active": active_p},
+        "tokens_per_step": tokens,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / hlo_flops if hlo_flops else 0.0,
+        "roofline_terms": terms,
+        "memory_s_kernelized": memory_s_kernelized,
+        "dominant_term": dominant,
+        "step_time_lower_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            (model_flops / n_dev) / PEAK_FLOPS / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    }
+
+
+def _shape_batch(cfg, sh, lm, labels=True):
+    spec = input_specs(cfg, sh.name)
+    if sh.name not in SHAPES or sh.seq_len != SHAPES[sh.name].seq_len:
+        # reduced smoke: rebuild with shrunken dims
+        B, S = sh.global_batch, sh.seq_len
+        i32, f = jnp.int32, jnp.dtype(cfg.compute_dtype)
+        d = cfg.d_model
+        if cfg.family == "encdec":
+            T = 32
+            spec = {"tokens": jax.ShapeDtypeStruct((B, T), i32),
+                    "labels": jax.ShapeDtypeStruct((B, T), i32),
+                    "audio_embeds": jax.ShapeDtypeStruct((B, S, d), f)}
+        else:
+            spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                spec["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, d), f)
+    if not labels:
+        spec = {k: v for k, v in spec.items() if k != "labels"}
+    return spec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | both | AxB[xC]")
+    ap.add_argument("--all", action="store_true", help="sweep all runnable cells")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke mode: reduced configs + shrunken shapes")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--moe-impl", default=None, choices=["gather", "a2a", "auto"],
+                    help="MoE dispatch implementation (§Perf knob)")
+    ap.add_argument("--remat-policy", default=None, choices=["full", "dots"],
+                    help="activation-checkpoint policy (§Perf knob)")
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adamw8"],
+                    help="f32 or int8-quantized optimizer moments (§Perf knob)")
+    ap.add_argument("--compress-pod-grads", action="store_true",
+                    help="int8 cross-pod (DCN) gradient all-reduce (§Perf knob)")
+    args = ap.parse_args(argv)
+    if args.moe_impl:
+        from repro.models.moe import set_moe_impl
+        set_moe_impl(args.moe_impl)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        todo = [(a, s) for a, s, ok in cells(list_archs()) if ok]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in todo:
+        for mesh_arg in meshes:
+            tag = f"{arch}__{shape}__{mesh_arg}{'__reduced' if args.reduced else ''}"
+            try:
+                rec = run_cell(arch, shape, mesh_arg, reduced=args.reduced,
+                               microbatches=args.microbatches,
+                               remat_policy=args.remat_policy,
+                               optimizer=args.optimizer,
+                               compress_pod_grads=args.compress_pod_grads)
+                (out / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+                t = rec["roofline_terms"]
+                print(f"[ok] {tag}: dominant={rec['dominant_term']} "
+                      f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+                      f"coll={t['collective_s']:.4f}s "
+                      f"mem/dev={rec['memory']['peak_per_device_gb']}GB "
+                      f"compile={rec['compile_seconds']}s", flush=True)
+            except Exception as e:  # noqa: BLE001 — sweep must report, not die
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"{len(failures)} failures:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        sys.exit(1)
+    print("all cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

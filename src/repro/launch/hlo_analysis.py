@@ -1,0 +1,295 @@
+"""Trip-count-aware static analysis of compiled (post-SPMD, post-fusion)
+HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scanned-layer model under-reports FLOPs/bytes/collectives by the trip
+count (~layers × microbatches). This walker parses the HLO module,
+builds a per-computation symbol table (operands are printed without
+shapes), recovers each loop's trip count from its condition
+computation (the ``compare(iter, constant)`` pattern ``lax.scan``
+emits), and aggregates per-device:
+
+  flops            — dot/convolution ops: 2·|out|·K (fusions recursed)
+  hbm_bytes        — operand+result bytes of top-level ops post-fusion
+                     (fused internals never touch HBM; in-place
+                     dynamic-update-slice is charged conservatively)
+  collective_bytes — ring-model bytes-on-wire per collective
+  by_coll / top    — per-op breakdown for §Perf diagnosis
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_INSTR = re.compile(
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONST = re.compile(r"%([\w.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+
+_COLL_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute"}
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "while",
+    "conditional", "custom-call",
+}
+
+
+def _sizes(type_field: str) -> tuple[float, float]:
+    """(bytes, elems) of a (possibly tuple) HLO type string."""
+    b = e = 0.0
+    for dt, dims in _SHAPE.findall(type_field):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        e += n
+        b += n * _DTYPE_BYTES.get(dt, 4)
+    return b, e
+
+
+def _score_like(type_field: str) -> bool:
+    """Attention-score-shaped results (…, S, S), S ≥ 1024 — traffic a
+    fused flash kernel keeps in VMEM on the TPU target."""
+    shapes = _SHAPE.findall(type_field)
+    for _, dims in shapes:
+        d = [int(x) for x in dims.split(",") if x]
+        if len(d) >= 2 and d[-1] == d[-2] and d[-1] >= 1024:
+            return True
+    return False
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    score_hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_coll: dict = field(default_factory=dict)
+    top_colls: list = field(default_factory=list)
+    top_hbm: list = field(default_factory=list)
+
+    def add(self, other: "HloCost", k: float = 1.0):
+        self.flops += other.flops * k
+        self.hbm_bytes += other.hbm_bytes * k
+        self.score_hbm_bytes += other.score_hbm_bytes * k
+        self.collective_bytes += other.collective_bytes * k
+        for name, v in other.by_coll.items():
+            rec = self.by_coll.setdefault(name, {"count": 0.0, "bytes": 0.0})
+            rec["count"] += v["count"] * k
+            rec["bytes"] += v["bytes"] * k
+        self.top_colls.extend((b * k, d) for b, d in other.top_colls)
+        self.top_hbm.extend((b * k, d) for b, d in other.top_hbm)
+        self._trim()
+
+    def _trim(self):
+        if len(self.top_colls) > 64:
+            self.top_colls.sort(key=lambda t: -t[0])
+            del self.top_colls[64:]
+        if len(self.top_hbm) > 64:
+            self.top_hbm.sort(key=lambda t: -t[0])
+            del self.top_hbm[64:]
+
+
+class _Module:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        cur: list[str] | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if cur is None:
+                if s.endswith("{") and "->" in s and " = " not in s.split("->")[0]:
+                    is_entry = s.startswith("ENTRY")
+                    name_m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", s)
+                    if name_m:
+                        cur = self.comps.setdefault(name_m.group(1), [])
+                        if is_entry:
+                            self.entry = name_m.group(1)
+                continue
+            if s == "}":
+                cur = None
+                continue
+            cur.append(s)
+        self._cost_cache: dict = {}
+        self._table_cache: dict = {}
+
+    # -- symbol tables -------------------------------------------------------
+    def table(self, comp: str) -> dict[str, str]:
+        if comp in self._table_cache:
+            return self._table_cache[comp]
+        tbl: dict[str, str] = {}
+        for line in self.comps.get(comp, ()):
+            m = _INSTR.match(line)
+            if m:
+                tbl[m.group(2)] = m.group(3)
+        self._table_cache[comp] = tbl
+        return tbl
+
+    # -- loop trip counts -----------------------------------------------------
+    def trip_count(self, cond: str) -> int:
+        consts = {}
+        for line in self.comps.get(cond, ()):
+            for m in _CONST.finditer(line):
+                consts[m.group(1)] = int(m.group(2))
+        if not consts:
+            return 1
+        for line in self.comps.get(cond, ()):
+            if "ROOT" in line:
+                for name in _OPERAND.findall(line.split("(", 1)[-1]):
+                    if name in consts:
+                        return max(consts[name], 1)
+        return max(consts.values())
+
+    # -- cost -------------------------------------------------------------------
+    def cost(self, comp: str, inside_fusion: bool = False) -> HloCost:
+        key = (comp, inside_fusion)
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        out = HloCost()
+        self._cost_cache[key] = out      # break cycles defensively
+        tbl = self.table(comp)
+        for line in self.comps.get(comp, ()):
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            _, name, type_field, op, rest = m.groups()
+            base = re.sub(r"-(start|done|update)$", "", op)
+            if op.endswith("-done") or op.endswith("-update"):
+                continue
+            operand_field = rest.split(")", 1)[0]
+            opnames = _OPERAND.findall(operand_field)
+
+            if base == "while":
+                bm, cm = _BODY.search(line), _COND.search(line)
+                trips = self.trip_count(cm.group(1)) if cm else 1
+                if bm:
+                    out.add(self.cost(bm.group(1)), trips)
+                continue
+            if base in ("fusion", "call"):
+                cm = _CALLS.search(line)
+                inplace = slice_like = False
+                if cm:
+                    inner = self.cost(cm.group(1), inside_fusion=True)
+                    out.flops += inner.flops
+                    out.add(HloCost(collective_bytes=inner.collective_bytes,
+                                    by_coll=inner.by_coll,
+                                    top_colls=inner.top_colls))
+                    called = self.comps.get(cm.group(1), ())
+                    inplace = any(" dynamic-update-slice(" in l for l in called)
+                    slice_like = any(" dynamic-slice(" in l or " gather(" in l
+                                     for l in called)
+                if not inside_fusion:
+                    b = self._io_bytes(type_field, opnames, tbl,
+                                       inplace=inplace, slice_like=slice_like)
+                    out.hbm_bytes += b
+                    if _score_like(type_field):
+                        out.score_hbm_bytes += b
+                    out.top_hbm.append((b, f"{op} -> {type_field.split('{')[0][:60]}"))
+                continue
+            if base in _COLL_OPS:
+                bts, _ = _sizes(type_field)
+                g = 1
+                gi = _GROUPS_IOTA.search(line)
+                gl = _GROUPS_LIST.search(line)
+                if gi:
+                    g = int(gi.group(2))
+                elif gl:
+                    g = len([x for x in gl.group(1).split(",") if x.strip() != ""])
+                factor = {
+                    "all-reduce": 2.0 * (g - 1) / max(g, 1),
+                    "all-gather": (g - 1) / max(g, 1),
+                    "reduce-scatter": float(g - 1),
+                    "all-to-all": (g - 1) / max(g, 1),
+                    "collective-permute": 1.0,
+                }[base]
+                moved = bts * factor
+                out.collective_bytes += moved
+                rec = out.by_coll.setdefault(base, {"count": 0.0, "bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes"] += moved
+                out.top_colls.append(
+                    (moved, f"{base} {type_field.split('{')[0]} g={g}"))
+                if not inside_fusion:
+                    out.hbm_bytes += self._io_bytes(type_field, opnames, tbl)
+                continue
+            if base == "dot":
+                _, out_elems = _sizes(type_field)
+                contract = 1
+                cdm = _CONTRACT.search(line)
+                if cdm and opnames:
+                    lhs_type = tbl.get(opnames[0], "")
+                    sh = _SHAPE.findall(lhs_type)
+                    if sh:
+                        lhs_dims = [int(x) for x in sh[0][1].split(",") if x]
+                        for ci in (int(x) for x in cdm.group(1).split(",") if x):
+                            if ci < len(lhs_dims):
+                                contract *= lhs_dims[ci]
+                out.flops += 2.0 * out_elems * contract
+            elif base == "convolution":
+                _, out_elems = _sizes(type_field)
+                kern = 1.0
+                if len(opnames) > 1:
+                    _, kern = _sizes(tbl.get(opnames[1], ""))
+                out.flops += 2.0 * out_elems * kern
+            if base not in _SKIP_BYTES and not inside_fusion:
+                b = self._io_bytes(
+                    type_field, opnames, tbl,
+                    inplace=(base == "dynamic-update-slice"),
+                    slice_like=(base in ("dynamic-slice", "gather", "scatter")),
+                )
+                out.hbm_bytes += b
+                if _score_like(type_field):
+                    out.score_hbm_bytes += b
+                out.top_hbm.append((b, f"{op} -> {type_field.split('{')[0][:60]}"))
+        return out
+
+    def _io_bytes(self, type_field: str, opnames: list[str], tbl: dict,
+                  *, inplace: bool = False, slice_like: bool = False) -> float:
+        """Approximate HBM traffic of one op.
+
+        inplace (dynamic-update-slice chains): the carried buffer is
+        aliased — charge the update, not the buffer. slice_like
+        (dynamic-slice / gather): only the touched rows stream, so big
+        operands are charged at result size.
+        """
+        rb, _ = _sizes(type_field)
+        total = 0.0 if inplace else rb
+        skip_buffer = inplace
+        for nm in opnames:
+            ob, _ = _sizes(tbl.get(nm, ""))
+            if skip_buffer and ob >= rb > 0:
+                skip_buffer = False     # the aliased carry buffer
+                continue
+            if (slice_like or inplace) and rb > 0 and ob > 4 * rb:
+                ob = rb
+            total += ob
+        return total
+
+
+def analyze_hlo(text: str) -> HloCost:
+    mod = _Module(text)
+    entry = mod.entry or (max(mod.comps, key=lambda n: len(mod.comps[n]))
+                          if mod.comps else "")
+    cost = mod.cost(entry)
+    cost.top_colls.sort(key=lambda t: -t[0])
+    cost.top_colls = cost.top_colls[:12]
+    cost.top_hbm.sort(key=lambda t: -t[0])
+    cost.top_hbm = cost.top_hbm[:12]
+    return cost

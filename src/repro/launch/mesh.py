@@ -1,0 +1,20 @@
+"""Production meshes.
+
+Defined as a FUNCTION so importing this module never touches jax
+device state — the dry-run sets XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi-pod adds the 2-pod DCN axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

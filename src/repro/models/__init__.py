@@ -1,0 +1,6 @@
+"""Model zoo: unified LM over dense / moe / ssm / hybrid / encdec / vlm."""
+from .common import ModelConfig, layer_flags
+from .lm import LM
+from . import decode
+
+__all__ = ["ModelConfig", "layer_flags", "LM", "decode"]

@@ -1,0 +1,527 @@
+"""Attention: GQA with causal/local/global masks, soft-capping, cross
+attention, memory-efficient chunked softmax, and KV-cache decode.
+
+The chunked path (double-blocked online softmax over q/kv blocks via
+``lax.scan``) never materializes the (S, S) score matrix — it is the
+pure-jnp oracle for the ``flash_attention`` Pallas kernel and is what
+long-sequence cells lower in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import init_linear, rope, softcap
+
+__all__ = [
+    "init_attention", "attention", "decode_attention", "init_kv_cache",
+]
+
+NEG_INF = -2.0e38
+# Above this sequence length the chunked online-softmax path is used.
+# §Perf finding (refuted hypothesis, iteration 3): in the jnp lowering,
+# block-chunking at S=4096 produced MORE HBM traffic than materializing
+# the (S,S) scores once under remat (per-block f32 round-trips); the
+# VMEM-fused win belongs to the Pallas flash kernel on real TPUs. The
+# chunked path is therefore reserved for sequences whose score matrix
+# genuinely cannot exist (32k prefill and beyond).
+CHUNKED_THRESHOLD = 8192
+Q_BLOCK = 512
+KV_BLOCK = 1024
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    dt = cfg.pdtype
+    H, KV, D, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_, cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_linear(ks[0], d, H * D, dt).reshape(d, H, D),
+        "wk": init_linear(ks[1], d, KV * D, dt).reshape(d, KV, D),
+        "wv": init_linear(ks[2], d, KV * D, dt).reshape(d, KV, D),
+        "wo": init_linear(ks[3], H * D, d, dt).reshape(H, D, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((D,), jnp.float32)
+        p["k_norm"] = jnp.zeros((D,), jnp.float32)
+    return p
+
+
+def _qk_norm(x, scale):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * (1.0 + scale)).astype(x.dtype)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, is_global, window: int):
+    """(…, Sq, Sk) boolean mask built from positions — never an (S,S)
+    table in HBM for the chunked path (block-local iota comparisons)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m = m & (kp <= qp)
+    if window > 0:
+        local = (qp - kp) < window
+        m = m & jnp.where(is_global, True, local)
+    return m
+
+
+def _sdpa(q, k, v, q_pos, k_pos, *, causal, is_global, window, cap, scale):
+    """Full-score reference path (small S)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    m = _mask(q_pos, k_pos, causal=causal, is_global=is_global, window=window)
+    s = jnp.where(m[:, None, :, :] if m.ndim == 3 else m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (ragged kv lengths, e.g.
+    1601 image tokens, fall back to their largest small factor)."""
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _chunked(q, k, v, q_pos, k_pos, *, causal, is_global, window, cap, scale,
+             q_block=Q_BLOCK, kv_block=KV_BLOCK, banded=False):
+    """Double-blocked online-softmax attention (flash oracle).
+
+    Supports Dv ≠ Dqk (MLA's 192-dim keys / 128-dim values).
+    ``banded`` (§Perf): statically-local layers stream only the ≤nw kv
+    blocks that can intersect each query block's window — O(S·W)
+    compute/traffic instead of O(S²)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // KV
+    q_block = _divisor_block(Sq, q_block)
+    kv_block = _divisor_block(Sk, kv_block)
+    nq, nk = Sq // q_block, Sk // kv_block
+
+    qb = q.reshape(B, nq, q_block, H, D).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos.reshape(B, nq, q_block).transpose(1, 0, 2) if q_pos.ndim == 2 else \
+        q_pos.reshape(nq, q_block)
+    kb = k.reshape(B, nk, kv_block, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, KV, Dv).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(B, nk, kv_block).transpose(1, 0, 2) if k_pos.ndim == 2 else \
+        k_pos.reshape(nk, kv_block)
+
+    nw = min(nk, (window + q_block - 1 + kv_block - 1) // kv_block + 1) \
+        if banded and window > 0 else nk
+
+    def q_step(_, qi):
+        i, q_i, qp_i = qi
+        if nw < nk:
+            end_b = ((i + 1) * q_block - 1) // kv_block
+            s0 = jnp.clip(end_b - nw + 1, 0, nk - nw)
+            kb_i = jax.lax.dynamic_slice_in_dim(kb, s0, nw, axis=0)
+            vb_i = jax.lax.dynamic_slice_in_dim(vb, s0, nw, axis=0)
+            kpb_i = jax.lax.dynamic_slice_in_dim(kpb, s0, nw, axis=0)
+        else:
+            kb_i, vb_i, kpb_i = kb, vb, kpb
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            k_j, v_j, kp_j = ki
+            k_rep = jnp.repeat(k_j, rep, axis=2)
+            v_rep = jnp.repeat(v_j, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_rep,
+                preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            msk = _mask(qp_i, kp_j, causal=causal, is_global=is_global, window=window)
+            s = jnp.where(msk[:, None] if msk.ndim == 3 else msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            corr = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), v_rep
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, Dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          (kb_i, vb_i, kpb_i))
+        out = (acc / jnp.maximum(l_f, 1e-37)[..., None]).astype(q.dtype)
+        return None, out.transpose(0, 2, 1, 3)   # (B, q_block, H, Dv)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb, qpb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dv)
+
+
+def attention(
+    params: dict,
+    x: jnp.ndarray,                     # (B, S, d)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,             # (B, S) or (S,)
+    *,
+    is_global=True,                     # python bool or traced per-layer flag
+    causal: bool = True,
+    kv_x: Optional[jnp.ndarray] = None,  # cross-attention source
+    kv_positions: Optional[jnp.ndarray] = None,
+    use_kernel: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    D = cfg.head_dim_
+    src = x if kv_x is None else kv_x
+    if kv_x is not None and kv_positions is None:
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(kv_x.shape[1])[None, :], kv_x.shape[:2])
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if cfg.qk_norm:
+        q = _qk_norm(q, params["q_norm"])
+        k = _qk_norm(k, params["k_norm"])
+    theta = cfg.rope_theta
+    if cfg.rope_theta_global:
+        theta = jnp.where(is_global, cfg.rope_theta_global, cfg.rope_theta)
+    if causal or kv_x is None:          # self-attention → rotary
+        q = rope(q, positions, theta)
+        k = rope(k, positions if kv_positions is None else kv_positions, theta)
+    kp = positions if kv_positions is None else kv_positions
+    scale = D ** -0.5
+    Sk = k.shape[1]
+    window = cfg.local_window if kv_x is None else 0   # no windows on cross
+    # statically-local layer (period-scan path) → banded computation.
+    # Only worth it when ≥¾ of the kv blocks get skipped — below that
+    # the blocked round-trips cost more than one materialized (S,S)
+    # under remat (§Perf iteration-3 lesson).
+    static_local = isinstance(is_global, bool) and not is_global and window > 0
+    if static_local and window * 8 <= Sk:
+        out = _chunked(q, k, v, positions, kp, causal=causal, is_global=False,
+                       window=window, cap=cfg.attn_logit_softcap, scale=scale,
+                       banded=True)
+    else:
+        fn = _chunked if max(S, Sk) > CHUNKED_THRESHOLD else _sdpa
+        out = fn(q, k, v, positions, kp, causal=causal, is_global=is_global,
+                 window=window, cap=cfg.attn_logit_softcap, scale=scale)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# -- decode -------------------------------------------------------------------
+
+def _sharded_decode_applicable(S: int) -> bool:
+    import os
+    from repro.runtime.pspec import current_mesh
+    if os.environ.get("REPRO_SHARDED_DECODE", "1") == "0":   # baseline knob
+        return False
+    mesh = current_mesh()
+    if mesh is None:
+        return False
+    m = mesh.shape.get("model", 1)
+    return m > 1 and S % m == 0 and S // m >= 128
+
+
+def _decode_bspec(mesh, B):
+    has_pod = mesh.shape.get("pod", 1) > 1
+    bax = ("pod", "data") if has_pod else ("data",)
+    pd = 1
+    for a in bax:
+        pd *= mesh.shape.get(a, 1)
+    if B > 1 and B % pd == 0:
+        return bax
+    if B > 1 and B % mesh.shape.get("data", 1) == 0:
+        return ("data",)
+    return None
+
+
+def _psum_proj(x, w, d: int, axis: str = "data"):
+    """Weight-stationary projection: x (B,1,d) full-d × w (d_loc, …) an
+    input-dim shard → partial product psum'd over the shard axis. The
+    weights never move; only (B,1,·) activations cross links. x must be
+    batch-REPLICATED across ``axis`` (gather batch first)."""
+    d_loc = w.shape[0]
+    if d_loc == d:
+        return jnp.einsum("bsd,d...->bs...", x, w)
+    rank = jax.lax.axis_index(axis)
+    xs = jax.lax.dynamic_slice_in_dim(x, rank * d_loc, d_loc, axis=2)
+    return jax.lax.psum(jnp.einsum("bsd,d...->bs...", xs, w), axis)
+
+
+def _gather_batch(x, bspec):
+    """all-gather the (tiny) decode activations over the batch axes so
+    weight-stationary partial products see every row."""
+    for ax in reversed(bspec or ()):
+        x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
+    return x
+
+
+def _batch_row_start(mesh, bspec, B_loc: int):
+    idx = jnp.int32(0)
+    for ax in (bspec or ()):
+        idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return idx * B_loc
+
+
+def _sharded_mlp_applicable() -> bool:
+    import os
+    from repro.runtime.pspec import current_mesh
+    if os.environ.get("REPRO_SHARDED_DECODE", "1") == "0":
+        return False
+    mesh = current_mesh()
+    return mesh is not None and mesh.shape.get("model", 1) > 1
+
+
+def decode_attention_sharded(params, x_t, cache_k, cache_v, pos,
+                             cfg: ModelConfig, *, is_global=True,
+                             ring: bool = False):
+    """Weight-stationary, sequence-parallel decode attention (§Perf).
+
+    Everything runs inside one shard_map: projections are partial
+    products over the ZeRO'd input dim (psum of (B,1,·) activations —
+    weights never gather), the KV cache stays sharded over 'model'
+    along S, and the online-softmax states combine with O(B·H·D)
+    psum/pmax.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.pspec import current_mesh
+
+    mesh = current_mesh()
+    B, S = cache_k.shape[0], cache_k.shape[1]
+    D = cfg.head_dim_
+    d = cfg.d_model
+    bspec = _decode_bspec(mesh, B)
+    m = mesh.shape.get("model", 1)
+    dsz = mesh.shape.get("data", 1)
+    cache_spec = P(bspec, "model", None, None)
+    x_spec = P(bspec, None, None)
+    d_ax = "data" if (dsz > 1 and d % dsz == 0) else None
+    wq_spec = P(d_ax, "model" if cfg.num_heads % m == 0 else None, None)
+    wk_spec = P(d_ax, "model" if cfg.num_kv_heads % m == 0 else None, None)
+    wo_spec = P("model" if cfg.num_heads % m == 0 else None, None, d_ax)
+    scale = D ** -0.5
+    rep = cfg.num_heads // cfg.num_kv_heads
+    window = cfg.local_window
+    cap = cfg.attn_logit_softcap
+    theta = cfg.rope_theta
+    if cfg.rope_theta_global:
+        theta = jnp.where(is_global, cfg.rope_theta_global, cfg.rope_theta)
+
+    def body(x, wq, wk, wv, wo, qn_s, kn_s, kc, vc, pos, theta):
+        Bl = x.shape[0]
+        # --- projections: weights stay put; batch rows gather (tiny),
+        # partial products psum over the weight's d-shard axis ---
+        xg = _gather_batch(x, bspec)              # (B_glob, 1, d)
+        q = _psum_proj(xg, wq, d)                 # (B_glob,1,H_loc,D)
+        kt = _psum_proj(xg, wk, d)
+        vt = _psum_proj(xg, wv, d)
+        if q.shape[2] != cfg.num_heads:           # gather tiny activations
+            q = jax.lax.all_gather(q, "model", axis=2, tiled=True)
+        if kt.shape[2] != cfg.num_kv_heads:
+            kt = jax.lax.all_gather(kt, "model", axis=2, tiled=True)
+            vt = jax.lax.all_gather(vt, "model", axis=2, tiled=True)
+        # back to this device's batch rows (the cache is batch-sharded)
+        row0 = _batch_row_start(mesh, bspec, Bl)
+        q, kt, vt = (jax.lax.dynamic_slice_in_dim(a, row0, Bl, axis=0)
+                     for a in (q, kt, vt))
+        if qn_s is not None:
+            q = _qk_norm(q, qn_s)
+            kt = _qk_norm(kt, kn_s)
+        posb = jnp.full((Bl, 1), pos, jnp.int32)
+        q = rope(q, posb, theta)
+        kt = rope(kt, posb, theta)
+
+        # --- sequence-sharded cache attention ---
+        S_loc = kc.shape[1]
+        KV = kc.shape[2]
+        grp = cfg.num_heads // KV
+        rank = jax.lax.axis_index("model")
+        start = rank * S_loc
+        # ring semantics: the write slot wraps modulo the window
+        slot = (jnp.mod(pos, S) if ring else pos) - start
+        own = (slot >= 0) & (slot < S_loc)
+        slot_c = jnp.clip(slot, 0, S_loc - 1)
+        # masked single-row write: the cache buffer itself never copies
+        ex_k = jax.lax.dynamic_slice_in_dim(kc, slot_c, 1, axis=1)
+        ex_v = jax.lax.dynamic_slice_in_dim(vc, slot_c, 1, axis=1)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, jnp.where(own, kt.astype(kc.dtype), ex_k), slot_c, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, jnp.where(own, vt.astype(vc.dtype), ex_v), slot_c, 1)
+        # grouped-query einsum — no KV repeat materialization
+        q5 = q.reshape(Bl, 1, KV, grp, D)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", q5, kc
+                       ).astype(jnp.float32) * scale           # (B,KV,grp,1,S)
+        s = softcap(s, cap)
+        j_g = start + jnp.arange(S_loc)
+        if ring:
+            # slot j holds absolute position pos − ((pos − j) mod W)
+            kpos = pos - jnp.mod(pos - j_g, S)
+            valid = kpos[None, None, None, None, :] >= 0
+        else:
+            kpos = j_g
+            valid = kpos[None, None, None, None, :] <= pos
+            if window > 0:
+                local = (pos - kpos)[None, None, None, None, :] < window
+                valid = valid & jnp.where(is_global, True, local)
+        s = jnp.where(valid, s, NEG_INF)
+        m_loc = s.max(axis=-1)                                 # (B,KV,grp,1)
+        M = jax.lax.pmax(m_loc, "model")
+        p = jnp.exp(s - M[..., None])
+        l = jax.lax.psum(p.sum(axis=-1), "model")
+        acc = jax.lax.psum(
+            jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vc.dtype), vc
+                       ).astype(jnp.float32), "model")
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(Bl, 1, cfg.num_heads, D)
+
+        # --- output projection: H over model (row-parallel) + d shards.
+        # Full batch again: the d-column gather over 'data' must collect
+        # pieces of the SAME rows (cf. the input-side gather).
+        og = _gather_batch(out, bspec)                         # (B_glob,1,H,D)
+        H_loc = wo.shape[0]
+        if H_loc != cfg.num_heads:
+            o_slice = jax.lax.dynamic_slice_in_dim(
+                og, rank * H_loc, H_loc, axis=2)
+            y = jax.lax.psum(
+                jnp.einsum("bshk,hkd->bsd", o_slice, wo), "model")
+        else:
+            y = jnp.einsum("bshk,hkd->bsd", og, wo)
+        if y.shape[-1] != d:                                   # d over data
+            y = jax.lax.all_gather(y, "data", axis=2, tiled=True)
+        y = jax.lax.dynamic_slice_in_dim(y, row0, Bl, axis=0)
+        return y, kc, vc
+
+    qn = params.get("q_norm")
+    kn = params.get("k_norm")
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, wq_spec, wk_spec, wk_spec, wo_spec,
+                  (P(None) if qn is not None else None),
+                  (P(None) if kn is not None else None),
+                  cache_spec, cache_spec, P(), P()),
+        out_specs=(x_spec, cache_spec, cache_spec),
+        check_rep=False,
+    )
+    y, cache_k, cache_v = fn(
+        x_t, params["wq"], params["wk"], params["wv"], params["wo"],
+        qn, kn, cache_k, cache_v, jnp.asarray(pos, jnp.int32),
+        jnp.asarray(theta, jnp.float32))
+    return y, cache_k, cache_v
+
+
+def decode_mlp_sharded(p, x, cfg: ModelConfig):
+    """Weight-stationary decode MLP: 2-D-sharded weights stay resident;
+    only (B,1,·) activations psum/gather across the mesh."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.pspec import current_mesh
+
+    mesh = current_mesh()
+    d = cfg.d_model
+    B = x.shape[0]
+    m = mesh.shape.get("model", 1)
+    dsz = mesh.shape.get("data", 1)
+    bspec = _decode_bspec(mesh, B)
+    x_spec = P(bspec, None, None)
+    d_ax = "data" if (dsz > 1 and d % dsz == 0) else None
+    f_ax = "model" if (m > 1 and cfg.d_ff % m == 0) else None
+    up_spec = P(d_ax, f_ax)
+    down_spec = P(f_ax, d_ax)
+    kind = cfg.mlp
+
+    def body(x, wg, wu, wdn):
+        Bl = x.shape[0]
+        xg = _gather_batch(x, bspec)              # (B_glob, 1, d)
+        if kind in ("swiglu", "geglu"):
+            g = _psum_proj(xg, wg, d)
+            u = _psum_proj(xg, wu, d)
+            act = (jax.nn.silu(g) if kind == "swiglu"
+                   else jax.nn.gelu(g, approximate=True)) * u
+        else:
+            u = _psum_proj(xg, wu, d)
+            act = (jnp.square(jax.nn.relu(u)) if kind == "squared_relu"
+                   else jax.nn.gelu(u, approximate=True))
+        # act (B_glob,1,f_loc) sharded over model; wdn (f_loc, d_loc)
+        y = jnp.einsum("bsf,fd->bsd", act, wdn)
+        if wdn.shape[0] != cfg.d_ff:              # f was model-sharded
+            y = jax.lax.psum(y, "model")
+        if y.shape[-1] != d:
+            y = jax.lax.all_gather(y, "data", axis=2, tiled=True)
+        row0 = _batch_row_start(mesh, bspec, Bl)
+        return jax.lax.dynamic_slice_in_dim(y, row0, Bl, axis=0)
+
+    if kind in ("swiglu", "geglu"):
+        args = (x, p["w_gate"], p["w_up"], p["w_down"])
+        specs = (x_spec, up_spec, up_spec, down_spec)
+    else:
+        args = (x, p["w_up"], p["w_up"], p["w_down"])
+        specs = (x_spec, up_spec, up_spec, down_spec)
+
+    fn = shard_map(
+        lambda x, wg, wu, wdn: body(x, wg, wu, wdn), mesh=mesh,
+        in_specs=specs, out_specs=x_spec, check_rep=False)
+    return fn(*args)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int,
+                  dtype=None) -> dict:
+    dt = dtype or cfg.cdtype
+    KV, D = cfg.num_kv_heads, cfg.head_dim_
+    shape = (layers, batch, max_len, KV, D)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_attention(
+    params: dict,
+    x_t: jnp.ndarray,                   # (B, 1, d)
+    cache_k: jnp.ndarray,               # (B, S_max, KV, D) — this layer's slice
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,                   # scalar int — current position
+    cfg: ModelConfig,
+    *,
+    is_global=True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token attention against the cache; returns (out, new_k, new_v)."""
+    B = x_t.shape[0]
+    D = cfg.head_dim_
+    q = jnp.einsum("bsd,dhk->bshk", x_t, params["wq"])
+    k_t = jnp.einsum("bsd,dhk->bshk", x_t, params["wk"])
+    v_t = jnp.einsum("bsd,dhk->bshk", x_t, params["wv"])
+    if cfg.qk_norm:
+        q = _qk_norm(q, params["q_norm"])
+        k_t = _qk_norm(k_t, params["k_norm"])
+    theta = cfg.rope_theta
+    if cfg.rope_theta_global:
+        theta = jnp.where(is_global, cfg.rope_theta_global, cfg.rope_theta)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posb, theta)
+    k_t = rope(k_t, posb, theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_t.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_t.astype(cache_v.dtype), pos, axis=1)
+
+    S = cache_k.shape[1]
+    KV = cache_k.shape[2]
+    rep = cfg.num_heads // KV
+    k = jnp.repeat(cache_k, rep, axis=2)
+    v = jnp.repeat(cache_v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    s = softcap(s, cfg.attn_logit_softcap)
+    idx = jnp.arange(S)[None, None, None, :]
+    valid = idx <= pos
+    if cfg.local_window > 0:
+        local = (pos - idx) < cfg.local_window
+        valid = valid & jnp.where(is_global, True, local)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x_t.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, cache_k, cache_v

@@ -1,0 +1,362 @@
+"""Single-token decode for every family, with family-specific caches.
+
+Local-attention layers use **ring-buffer** K/V caches of size
+``local_window`` (slot = pos % window, keys stored pre-rotated), so a
+524 288-token context costs gemma-3 only its handful of global layers —
+the memory-roofline win reported in §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.pspec import shard
+from .attention import decode_attention, init_kv_cache
+from .common import ModelConfig
+from .layers import mlp, rms_norm, rope, softcap
+from .mla import init_mla_cache, mla_decode
+from .moe import moe_layer
+from .rglru import init_rglru_state, rglru_decode
+from .ssm import init_mamba_cache, mamba_decode
+
+__all__ = ["init_cache", "decode_step"]
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer local attention
+# ---------------------------------------------------------------------------
+
+def _ring_decode(params, x_t, ring_k, ring_v, pos, cfg: ModelConfig, theta: float):
+    """Decode against a window-sized ring cache. ring_*: (B, W, KV, D)."""
+    B = x_t.shape[0]
+    W = ring_k.shape[1]
+    D = cfg.head_dim_
+    q = jnp.einsum("bsd,dhk->bshk", x_t, params["wq"])
+    k_t = jnp.einsum("bsd,dhk->bshk", x_t, params["wk"])
+    v_t = jnp.einsum("bsd,dhk->bshk", x_t, params["wv"])
+    if cfg.qk_norm:
+        from .attention import _qk_norm
+        q = _qk_norm(q, params["q_norm"])
+        k_t = _qk_norm(k_t, params["k_norm"])
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posb, theta)
+    k_t = rope(k_t, posb, theta)
+    slot = jnp.mod(pos, W)
+    ring_k = jax.lax.dynamic_update_slice_in_dim(ring_k, k_t.astype(ring_k.dtype), slot, axis=1)
+    ring_v = jax.lax.dynamic_update_slice_in_dim(ring_v, v_t.astype(ring_v.dtype), slot, axis=1)
+    # absolute position held by each slot: pos − ((pos − j) mod W)
+    j = jnp.arange(W)
+    kpos = pos - jnp.mod(pos - j, W)
+    valid = kpos >= 0
+    rep = cfg.num_heads // cfg.num_kv_heads
+    k = jnp.repeat(ring_k, rep, axis=2)
+    v = jnp.repeat(ring_v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    s = softcap(s, cfg.attn_logit_softcap)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x_t.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, ring_k, ring_v
+
+
+def _cross_attend(params, x_t, ck, cv, cfg: ModelConfig):
+    """Attend a single token over fixed cross K/V (image / encoder)."""
+    D = cfg.head_dim_
+    q = jnp.einsum("bsd,dhk->bshk", x_t, params["wq"])
+    rep = cfg.num_heads // cfg.num_kv_heads
+    k = jnp.repeat(ck, rep, axis=2)
+    v = jnp.repeat(cv, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    p = jax.nn.softmax(s, axis=-1).astype(x_t.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def _attn_decode_block(p, x_t, kc, vc, pos, cfg, *, is_global, ring, theta):
+    from .attention import (_sharded_decode_applicable, _sharded_mlp_applicable,
+                            decode_attention_sharded, decode_mlp_sharded)
+    h = rms_norm(x_t, p["ln1"])
+    sharded = _sharded_decode_applicable(kc.shape[1])
+    if sharded:
+        # ring caches shard their window dim over 'model' the same way
+        a, kc, vc = decode_attention_sharded(p["attn"], h, kc, vc, pos, cfg,
+                                             is_global=is_global, ring=ring)
+    elif ring:
+        a, kc, vc = _ring_decode(p["attn"], h, kc, vc, pos, cfg, theta)
+    else:
+        a, kc, vc = decode_attention(p["attn"], h, kc, vc, pos, cfg, is_global=is_global)
+    x = x_t + a
+    h2 = rms_norm(x, p["ln2"])
+    if _sharded_mlp_applicable():
+        x = x + decode_mlp_sharded(p["mlp"], h2, cfg)
+    else:
+        x = x + mlp(p["mlp"], h2, cfg.mlp)
+    return x, kc, vc
+
+
+def _cross_block(p, x_t, ck, cv, cfg):
+    h = _cross_attend(p["attn"], rms_norm(x_t, p["ln1"]), ck, cv, cfg)
+    if "xgate" in p:
+        h = h * jnp.tanh(p["xgate"]).astype(h.dtype)
+    x = x_t + h
+    return x + mlp(p["mlp"], rms_norm(x, p["ln2"]), cfg.mlp)
+
+
+def _period_reshape(tree, n_p: int, period: int):
+    return jax.tree.map(lambda a: a.reshape((n_p, period) + a.shape[1:]), tree)
+
+
+def _pattern_period(cfg: ModelConfig) -> tuple[int, str]:
+    pat = cfg.layer_pattern
+    assert cfg.num_layers % len(pat) == 0 or cfg.family == "hybrid"
+    return cfg.num_layers // len(pat), pat
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(lm, batch: int, max_len: int, *, image_embeds=None,
+               audio_embeds=None, params=None) -> dict[str, Any]:
+    cfg: ModelConfig = lm.cfg
+    fam = cfg.family
+    KV, D = cfg.num_kv_heads, cfg.head_dim_
+    W = cfg.local_window
+
+    if fam == "dense":
+        if "L" in cfg.layer_pattern and W > 0:
+            n_p, pat = _pattern_period(cfg)
+            nl, ng = pat.count("L"), pat.count("G")
+            return {
+                "local_k": jnp.zeros((n_p, nl, batch, min(W, max_len), KV, D), cfg.cdtype),
+                "local_v": jnp.zeros((n_p, nl, batch, min(W, max_len), KV, D), cfg.cdtype),
+                "global_k": jnp.zeros((n_p, ng, batch, max_len, KV, D), cfg.cdtype),
+                "global_v": jnp.zeros((n_p, ng, batch, max_len, KV, D), cfg.cdtype),
+            }
+        return init_kv_cache(cfg, batch, max_len, cfg.num_layers)
+
+    if fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_p = cfg.num_layers // k_every
+        c = init_kv_cache(cfg, batch, max_len, n_p * (k_every - 1))
+        cache = {
+            "k": c["k"].reshape((n_p, k_every - 1) + c["k"].shape[1:]),
+            "v": c["v"].reshape((n_p, k_every - 1) + c["v"].shape[1:]),
+        }
+        # precompute image cross K/V per cross layer
+        assert image_embeds is not None and params is not None
+        img = image_embeds.astype(cfg.cdtype)
+        wk = params["cross_blocks"]["attn"]["wk"]    # (n_p, d, KV, D)
+        wv = params["cross_blocks"]["attn"]["wv"]
+        cache["cross_k"] = jnp.einsum("bnd,pdhk->pbnhk", img, wk)
+        cache["cross_v"] = jnp.einsum("bnd,pdhk->pbnhk", img, wv)
+        return cache
+
+    if fam == "moe":
+        k = cfg.first_k_dense
+        cache = {"moe": init_mla_cache(cfg, batch, max_len, cfg.num_layers - k)}
+        if k:
+            cache["dense"] = init_mla_cache(cfg, batch, max_len, k)
+        return cache
+
+    if fam == "ssm":
+        return init_mamba_cache(cfg, batch, cfg.num_layers)
+
+    if fam == "hybrid":
+        n_p, rem = divmod(cfg.num_layers, 3)
+        st = init_rglru_state(cfg, batch, n_p * 2)
+        cache = {
+            "h": st["h"].reshape(n_p, 2, batch, -1),
+            "conv": st["conv"].reshape(n_p, 2, batch, 3, -1),
+            "ring_k": jnp.zeros((n_p, batch, min(W, max_len), KV, D), cfg.cdtype),
+            "ring_v": jnp.zeros((n_p, batch, min(W, max_len), KV, D), cfg.cdtype),
+        }
+        if rem:
+            ex = init_rglru_state(cfg, batch, rem)
+            cache["extra_h"], cache["extra_conv"] = ex["h"], ex["conv"]
+        return cache
+
+    if fam == "encdec":
+        assert audio_embeds is not None and params is not None
+        enc = lm.encode(params, audio_embeds)
+        wk = params["dec_cross"]["attn"]["wk"]       # (L, d, KV, D)
+        wv = params["dec_cross"]["attn"]["wv"]
+        cache = init_kv_cache(cfg, batch, max_len, cfg.num_layers)
+        cache["cross_k"] = jnp.einsum("bnd,ldhk->lbnhk", enc, wk)
+        cache["cross_v"] = jnp.einsum("bnd,ldhk->lbnhk", enc, wv)
+        return cache
+
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(lm, params, tokens_t: jnp.ndarray, cache: dict, pos):
+    """tokens_t: (B, 1) int32; pos: scalar int32 → (logits (B,1,V), cache)."""
+    cfg: ModelConfig = lm.cfg
+    fam = cfg.family
+    x = lm._embed(params, tokens_t)
+    x = shard(x, "batch", None, None)
+
+    if fam == "dense":
+        if "L" in cfg.layer_pattern and cfg.local_window > 0:
+            n_p, pat = _pattern_period(cfg)
+            period = len(pat)
+            blocks = _period_reshape(params["blocks"], n_p, period)
+            li = np.array([i for i, c in enumerate(pat) if c == "L"])
+            gi = np.array([i for i, c in enumerate(pat) if c == "G"])
+            loc = jax.tree.map(lambda a: a[:, li], blocks)
+            glo = jax.tree.map(lambda a: a[:, gi], blocks)
+
+            def period_step(x, inp):
+                lb, lk, lv, gb, gk, gv = inp
+
+                def local_step(x, s):
+                    b, kc, vc = s
+                    x, kc, vc = _attn_decode_block(
+                        b, x, kc, vc, pos, cfg, is_global=False, ring=True,
+                        theta=cfg.rope_theta)
+                    return x, (kc, vc)
+
+                x, (lk, lv) = jax.lax.scan(local_step, x, (lb, lk, lv))
+
+                def global_step(x, s):
+                    b, kc, vc = s
+                    x, kc, vc = _attn_decode_block(
+                        b, x, kc, vc, pos, cfg, is_global=True, ring=False,
+                        theta=cfg.rope_theta_global or cfg.rope_theta)
+                    return x, (kc, vc)
+
+                x, (gk, gv) = jax.lax.scan(global_step, x, (gb, gk, gv))
+                return x, (lk, lv, gk, gv)
+
+            x, (lk, lv, gk, gv) = jax.lax.scan(
+                period_step, x,
+                (loc, cache["local_k"], cache["local_v"], glo,
+                 cache["global_k"], cache["global_v"]))
+            cache = dict(cache, local_k=lk, local_v=lv, global_k=gk, global_v=gv)
+        else:
+            def step(x, inp):
+                b, kc, vc = inp
+                x, kc, vc = _attn_decode_block(
+                    b, x, kc, vc, pos, cfg, is_global=True, ring=False,
+                    theta=cfg.rope_theta)
+                return x, (kc, vc)
+
+            x, (k, v) = jax.lax.scan(step, x, (params["blocks"], cache["k"], cache["v"]))
+            cache = dict(cache, k=k, v=v)
+
+    elif fam == "vlm":
+        def period_step(x, inp):
+            sb, kc, vc, cb, ck, cv = inp
+
+            def self_step(x, s):
+                b, k_, v_ = s
+                x, k_, v_ = _attn_decode_block(
+                    b, x, k_, v_, pos, cfg, is_global=True, ring=False,
+                    theta=cfg.rope_theta)
+                return x, (k_, v_)
+
+            x, (kc, vc) = jax.lax.scan(self_step, x, (sb, kc, vc))
+            x = _cross_block(cb, x, ck, cv, cfg)
+            return x, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(
+            period_step, x,
+            (params["self_blocks"], cache["k"], cache["v"],
+             params["cross_blocks"], cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, k=k, v=v)
+
+    elif fam == "moe":
+        # NOTE (§Perf, refuted): routing MLA decode through the
+        # weight-stationary shard_map path (mla_decode_sharded) measured
+        # 0.8–0.9× — the latent cache is rank-compressed and already
+        # lowers sharded under SPMD (no GQA head mismatch to force a
+        # gather), so the explicit path only added batch-gather
+        # overhead. The absorbed-form pjit path stays.
+        def step(x, inp):
+            b, ckv, kr = inp
+            h = rms_norm(x, b["ln1"])
+            a, ckv, kr = mla_decode(b["attn"], h, ckv, kr, pos, cfg)
+            x = x + a
+            h = rms_norm(x, b["ln2"])
+            if "moe" in b:
+                y, _ = moe_layer(b["moe"], h, cfg)
+            else:
+                y = mlp(b["mlp"], h, cfg.mlp)
+            return x + y, (ckv, kr)
+
+        if cfg.first_k_dense:
+            x, (ckv, kr) = jax.lax.scan(
+                step, x,
+                (params["dense_blocks"], cache["dense"]["c_kv"], cache["dense"]["k_rope"]))
+            cache = dict(cache, dense={"c_kv": ckv, "k_rope": kr})
+        x, (ckv, kr) = jax.lax.scan(
+            step, x,
+            (params["moe_blocks"], cache["moe"]["c_kv"], cache["moe"]["k_rope"]))
+        cache = dict(cache, moe={"c_kv": ckv, "k_rope": kr})
+
+    elif fam == "ssm":
+        def step(x, inp):
+            b, conv, st = inp
+            y, conv, st = mamba_decode(b["mix"], rms_norm(x, b["ln"]), conv, st, cfg)
+            return x + y, (conv, st)
+
+        x, (conv, st) = jax.lax.scan(
+            step, x, (params["blocks"], cache["conv"], cache["state"]))
+        cache = dict(cache, conv=conv, state=st)
+
+    elif fam == "hybrid":
+        def rec_step(x, inp):
+            b, h, conv = inp
+            y, h, conv = rglru_decode(b["mix"], rms_norm(x, b["ln1"]), h, conv, cfg)
+            x = x + y
+            x = x + mlp(b["mlp"], rms_norm(x, b["ln2"]), cfg.mlp)
+            return x, (h, conv)
+
+        def period_step(x, inp):
+            rb, h, conv, ab, rk, rv = inp
+            x, (h, conv) = jax.lax.scan(rec_step, x, (rb, h, conv))
+            x, rk, rv = _attn_decode_block(
+                ab, x, rk, rv, pos, cfg, is_global=False, ring=True,
+                theta=cfg.rope_theta)
+            return x, (h, conv, rk, rv)
+
+        x, (h, conv, rk, rv) = jax.lax.scan(
+            period_step, x,
+            (params["rec_blocks"], cache["h"], cache["conv"],
+             params["attn_blocks"], cache["ring_k"], cache["ring_v"]))
+        cache = dict(cache, h=h, conv=conv, ring_k=rk, ring_v=rv)
+        if "extra_rec" in params:
+            x, (eh, ec) = jax.lax.scan(
+                rec_step, x, (params["extra_rec"], cache["extra_h"], cache["extra_conv"]))
+            cache = dict(cache, extra_h=eh, extra_conv=ec)
+
+    elif fam == "encdec":
+        def step(x, inp):
+            (sb, cb), kc, vc, ck, cv = inp
+            x, kc, vc = _attn_decode_block(
+                sb, x, kc, vc, pos, cfg, is_global=True, ring=False,
+                theta=cfg.rope_theta)
+            x = _cross_block(cb, x, ck, cv, cfg)
+            return x, (kc, vc)
+
+        x, (k, v) = jax.lax.scan(
+            step, x,
+            ((params["dec_self"], params["dec_cross"]), cache["k"], cache["v"],
+             cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, k=k, v=v)
+    else:
+        raise ValueError(fam)
+
+    return lm._logits(params, x), cache

@@ -1,0 +1,105 @@
+"""Shared layers: norms, embeddings, RoPE, MLP variants.
+
+Parameters are plain pytrees (dicts of jnp arrays). Initializers take
+an explicit PRNG key so ``jax.eval_shape`` can derive abstract params
+for the AOT dry-run without allocating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig
+
+__all__ = [
+    "rms_norm", "init_linear", "linear", "init_embedding", "embed",
+    "rope", "init_mlp", "mlp", "softcap",
+]
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_norm(d: int) -> jnp.ndarray:
+    # stored as (scale − 1) so zeros-init == identity (gemma convention)
+    return jnp.zeros((d,), jnp.float32)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: float | None = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+# -- RoPE -------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    if x.ndim == angles.ndim + 1:       # head axis present
+        angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP variants -------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_linear(k1, cfg.d_model, d_ff, dt),
+            "w_up": init_linear(k2, cfg.d_model, d_ff, dt),
+            "w_down": init_linear(k3, d_ff, cfg.d_model, dt),
+        }
+    return {
+        "w_up": init_linear(k1, cfg.d_model, d_ff, dt),
+        "w_down": init_linear(k2, d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(x, params["w_gate"])) * linear(x, params["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(linear(x, params["w_gate"]), approximate=True) * linear(
+            x, params["w_up"]
+        )
+    elif kind == "squared_relu":               # nemotron-4
+        h = jnp.square(jax.nn.relu(linear(x, params["w_up"])))
+    elif kind == "gelu":                       # whisper
+        h = jax.nn.gelu(linear(x, params["w_up"]), approximate=True)
+    else:
+        raise ValueError(kind)
+    return linear(h, params["w_down"])

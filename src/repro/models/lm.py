@@ -1,0 +1,424 @@
+"""Unified language-model assembly for all ten architectures.
+
+Every repeated block is a ``lax.scan`` over stacked params, so HLO size
+is O(pattern period), not O(depth) — 80 AOT compiles stay cheap.
+Heterogeneous stacks (local:global attention, RG-LRU:attention,
+dense-then-MoE, self:cross) are expressed as either per-layer flag
+arrays riding through one scan (when param shapes are uniform) or
+period-grouped scans (when they are not).
+
+Decode caches:
+  dense        — K/V per layer; **local layers use ring buffers of size
+                 window** (the long_500k memory win), global layers full
+  moe (MLA)    — compressed (c_kv, k_rope) latents only
+  ssm (mamba2) — constant (H, P, N) state + conv tail
+  hybrid       — RG-LRU state + windowed ring K/V for the attn third
+  encdec       — decoder self K/V + precomputed cross K/V
+  vlm          — self K/V + precomputed image cross K/V
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.pspec import shard
+from .attention import attention, decode_attention, init_attention
+from .common import ModelConfig, layer_flags
+from .layers import embed, init_embedding, init_mlp, init_norm, mlp, rms_norm, softcap
+from .mla import init_mla, init_mla_cache, mla_attention, mla_decode
+from .moe import init_moe, moe_layer
+from .rglru import init_rglru, init_rglru_state, rglru_decode, rglru_forward
+from .ssm import init_mamba, init_mamba_cache, mamba_decode, mamba_forward
+
+__all__ = ["LM"]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, d_ff=None, cross=False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": init_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg, cross=cross),
+        "ln2": init_norm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg, d_ff),
+    }
+    if cross:
+        p["xgate"] = jnp.zeros((), jnp.float32)    # mllama-style tanh gate
+    return p
+
+
+def _attn_block(p, x, cfg, positions, is_global=True, kv_x=None, kv_positions=None):
+    h = attention(
+        p["attn"], rms_norm(x, p["ln1"]), cfg, positions,
+        is_global=is_global, causal=kv_x is None, kv_x=kv_x,
+        kv_positions=kv_positions,
+    )
+    if "xgate" in p:
+        h = h * jnp.tanh(p["xgate"]).astype(h.dtype)
+    x = x + h
+    x = shard(x, "batch", None, None)
+    h = mlp(p["mlp"], rms_norm(x, p["ln2"]), cfg.mlp)
+    return shard(x + h, "batch", None, None)
+
+
+def _init_mla_block(key, cfg: ModelConfig, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": init_norm(cfg.d_model),
+        "attn": init_mla(k1, cfg),
+        "ln2": init_norm(cfg.d_model),
+    }
+    if use_moe:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def _mla_block(p, x, cfg, positions):
+    x = x + mla_attention(p["attn"], rms_norm(x, p["ln1"]), cfg, positions)
+    x = shard(x, "batch", None, None)
+    h = rms_norm(x, p["ln2"])
+    if "moe" in p:
+        y, aux = moe_layer(p["moe"], h, cfg)
+    else:
+        y, aux = mlp(p["mlp"], h, cfg.mlp), 0.0
+    return shard(x + y, "batch", None, None), aux
+
+
+def _init_mamba_block(key, cfg):
+    return {"ln": init_norm(cfg.d_model), "mix": init_mamba(key, cfg)}
+
+
+def _init_rglru_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_norm(cfg.d_model),
+        "mix": init_rglru(k1, cfg),
+        "ln2": init_norm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg),
+    }
+
+
+def _rglru_block(p, x, cfg):
+    x = x + rglru_forward(p["mix"], rms_norm(x, p["ln1"]), cfg)
+    return x + mlp(p["mlp"], rms_norm(x, p["ln2"]), cfg.mlp)
+
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Pure-function bundle for one architecture."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.flags = layer_flags(cfg)
+
+    # ---------------- init ----------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        V = cfg.padded_vocab
+        params: dict[str, Any] = {
+            "embed": init_embedding(keys[0], V, cfg.d_model, cfg.pdtype),
+            "final_norm": init_norm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = init_embedding(keys[1], V, cfg.d_model, cfg.pdtype)
+
+        fam = cfg.family
+        if fam in ("dense",):
+            params["blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg), keys[2], cfg.num_layers)
+        elif fam == "vlm":
+            k_every = cfg.cross_attn_every
+            n_p = cfg.num_layers // k_every
+            params["self_blocks"] = jax.vmap(
+                lambda ks: _stack_init(lambda k: _init_attn_block(k, cfg), ks, k_every - 1)
+            )(jax.random.split(keys[2], n_p))
+            params["cross_blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg, cross=True), keys[3], n_p)
+        elif fam == "moe":
+            if cfg.first_k_dense:
+                params["dense_blocks"] = _stack_init(
+                    lambda k: _init_mla_block(k, cfg, use_moe=False),
+                    keys[2], cfg.first_k_dense)
+            params["moe_blocks"] = _stack_init(
+                lambda k: _init_mla_block(k, cfg, use_moe=True),
+                keys[3], cfg.num_layers - cfg.first_k_dense)
+        elif fam == "ssm":
+            params["blocks"] = _stack_init(
+                lambda k: _init_mamba_block(k, cfg), keys[2], cfg.num_layers)
+        elif fam == "hybrid":
+            n_p, rem = divmod(cfg.num_layers, 3)
+            params["rec_blocks"] = jax.vmap(
+                lambda ks: _stack_init(lambda k: _init_rglru_block(k, cfg), ks, 2)
+            )(jax.random.split(keys[2], n_p))
+            params["attn_blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg), keys[3], n_p)
+            if rem:
+                params["extra_rec"] = _stack_init(
+                    lambda k: _init_rglru_block(k, cfg), keys[4], rem)
+        elif fam == "encdec":
+            params["enc_blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg), keys[2], cfg.num_encoder_layers)
+            params["enc_norm"] = init_norm(cfg.d_model)
+            params["dec_self"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg), keys[3], cfg.num_layers)
+            params["dec_cross"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg, cross=True), keys[4], cfg.num_layers)
+        else:
+            raise ValueError(fam)
+        return params
+
+    def abstract_params(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+    # ---------------- embedding / head ----------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = embed(tokens, params["embed"]).astype(cfg.cdtype)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.cdtype)
+        return shard(x, "batch", None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"])
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.dtype(cfg.logits_dtype))
+        logits = softcap(logits, cfg.final_logit_softcap)
+        return shard(logits, "batch", None, "vocab")
+
+    # ---------------- forward (train / prefill) ----------------
+    def forward(self, params, tokens, *, image_embeds=None, audio_embeds=None,
+                last_only: bool = False):
+        """tokens (B,S) → logits; returns (logits, aux_loss).
+
+        ``last_only`` (serving prefill) emits logits for the final
+        position only — the (B,S,V) tensor never materializes."""
+        x, aux = self._backbone(params, tokens, image_embeds=image_embeds,
+                                audio_embeds=audio_embeds)
+        if last_only:
+            x = x[:, -1:]
+        return self._logits(params, x), aux
+
+    def _backbone(self, params, tokens, *, image_embeds=None, audio_embeds=None):
+        """tokens (B,S) → final hidden states (B,S,d) (pre final-norm)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self._embed(params, tokens)
+        aux = jnp.zeros((), jnp.float32)
+        fam = cfg.family
+
+        if fam == "dense":
+            pat = cfg.pattern_for()[: len(cfg.layer_pattern)]
+            li = [i for i, c in enumerate(cfg.layer_pattern) if c == "L"]
+            gi = [i for i, c in enumerate(cfg.layer_pattern) if c == "G"]
+            # Period-grouped scan when the pattern is contiguous L…G:
+            # local layers become STATICALLY local → banded attention
+            # (O(S·W) instead of O(S²)) kicks in (§Perf).
+            use_period = (
+                li and gi and cfg.local_window > 0
+                and cfg.num_layers % len(cfg.layer_pattern) == 0
+                and max(li) < min(gi)
+            )
+            if use_period:
+                n_p = cfg.num_layers // len(cfg.layer_pattern)
+                stacked = jax.tree.map(
+                    lambda a: a.reshape((n_p, len(cfg.layer_pattern)) + a.shape[1:]),
+                    params["blocks"])
+                loc = jax.tree.map(lambda a: a[:, np.array(li)], stacked)
+                glo = jax.tree.map(lambda a: a[:, np.array(gi)], stacked)
+                body_l = _maybe_remat(
+                    lambda x, blk: _attn_block(blk, x, cfg, positions,
+                                               is_global=False), cfg)
+                body_g = _maybe_remat(
+                    lambda x, blk: _attn_block(blk, x, cfg, positions,
+                                               is_global=True), cfg)
+
+                def period(x, inp):
+                    lb, gb = inp
+                    x, _ = jax.lax.scan(lambda h, b: (body_l(h, b), None), x, lb)
+                    x, _ = jax.lax.scan(lambda h, b: (body_g(h, b), None), x, gb)
+                    return x, None
+
+                x, _ = jax.lax.scan(period, x, (loc, glo))
+            else:
+                is_global = jnp.asarray(self.flags["is_global"])
+                body = _maybe_remat(
+                    lambda x, blk, g: _attn_block(blk, x, cfg, positions,
+                                                  is_global=g), cfg)
+
+                def step(x, inp):
+                    blk, g = inp
+                    return body(x, blk, g), None
+
+                x, _ = jax.lax.scan(step, x, (params["blocks"], is_global))
+
+        elif fam == "vlm":
+            img = image_embeds.astype(cfg.cdtype)
+            body_self = _maybe_remat(
+                lambda x, blk: _attn_block(blk, x, cfg, positions), cfg)
+            body_cross = _maybe_remat(
+                lambda x, blk: _attn_block(blk, x, cfg, positions, kv_x=img), cfg)
+
+            def period(x, inp):
+                selfs, crossb = inp
+                x, _ = jax.lax.scan(lambda h, b: (body_self(h, b), None), x, selfs)
+                return body_cross(x, crossb), None
+
+            x, _ = jax.lax.scan(period, x, (params["self_blocks"], params["cross_blocks"]))
+
+        elif fam == "moe":
+            body = _maybe_remat(
+                lambda x, blk: _mla_block(blk, x, cfg, positions), cfg)
+
+            def step(carry, blk):
+                x, aux = carry
+                x, a = body(x, blk)
+                return (x, aux + a), None
+
+            if cfg.first_k_dense:
+                (x, aux), _ = jax.lax.scan(step, (x, aux), params["dense_blocks"])
+            (x, aux), _ = jax.lax.scan(step, (x, aux), params["moe_blocks"])
+
+        elif fam == "ssm":
+            body = _maybe_remat(
+                lambda x, blk: x + mamba_forward(blk["mix"], rms_norm(x, blk["ln"]), cfg),
+                cfg)
+            x, _ = jax.lax.scan(lambda h, b: (body(h, b), None), x, params["blocks"])
+
+        elif fam == "hybrid":
+            body_rec = _maybe_remat(lambda x, blk: _rglru_block(blk, x, cfg), cfg)
+            body_attn = _maybe_remat(
+                lambda x, blk: _attn_block(blk, x, cfg, positions, is_global=False), cfg)
+
+            def period(x, inp):
+                recs, attnb = inp
+                x, _ = jax.lax.scan(lambda h, b: (body_rec(h, b), None), x, recs)
+                return body_attn(x, attnb), None
+
+            x, _ = jax.lax.scan(period, x, (params["rec_blocks"], params["attn_blocks"]))
+            if "extra_rec" in params:
+                x, _ = jax.lax.scan(
+                    lambda h, b: (body_rec(h, b), None), x, params["extra_rec"])
+
+        elif fam == "encdec":
+            enc = self.encode(params, audio_embeds)
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(enc.shape[1])[None, :], enc.shape[:2])
+            body = _maybe_remat(
+                lambda x, blks: _attn_block(
+                    blks[1],
+                    _attn_block(blks[0], x, cfg, positions),
+                    cfg, positions, kv_x=enc,
+                    kv_positions=enc_pos,
+                ), cfg)
+            x, _ = jax.lax.scan(
+                lambda h, b: (body(h, b), None), x,
+                (params["dec_self"], params["dec_cross"]))
+        else:
+            raise ValueError(fam)
+        return x, aux
+
+    def encode(self, params, audio_embeds):
+        """Whisper encoder over precomputed (stub-frontend) frames."""
+        cfg = self.cfg
+        x = audio_embeds.astype(cfg.cdtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        def enc_block(p, x):
+            h = attention(p["attn"], rms_norm(x, p["ln1"]), cfg, positions, causal=False)
+            x = x + h
+            return x + mlp(p["mlp"], rms_norm(x, p["ln2"]), cfg.mlp)
+
+        enc_body = _maybe_remat(enc_block, cfg)
+        x, _ = jax.lax.scan(lambda h, b: (enc_body(b, h), None), x, params["enc_blocks"])
+        return rms_norm(x, params["enc_norm"])
+
+    # ---------------- loss ----------------
+    # target live-logit footprint per CE chunk: global fp32 elements
+    # (2^31 ≈ 8.6 GB global ≈ 34 MB/device on a 256-chip pod)
+    _CE_CHUNK_BUDGET = 2 ** 31
+    _CE_MAX_CHUNKS = 512
+
+    def loss(self, params, batch: dict):
+        """Sequence-chunked cross entropy (+z-loss): the (B,S,V) logits
+        tensor never materializes — each chunk's logits are computed,
+        reduced, and rematerialized in backward (fused-CE equivalent).
+        """
+        cfg = self.cfg
+        x, aux = self._backbone(
+            params, batch["tokens"],
+            image_embeds=batch.get("image_embeds"),
+            audio_embeds=batch.get("audio_embeds"),
+        )
+        labels = batch["labels"]
+        B, S, d = x.shape
+        V = cfg.padded_vocab
+        # pick a chunk count that divides S and respects the budget
+        target = max(1, min((B * S * V) // self._CE_CHUNK_BUDGET,
+                            self._CE_MAX_CHUNKS, S))
+        n_chunks = 1
+        for c in range(target, 0, -1):
+            if S % c == 0:
+                n_chunks = c
+                break
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+        def chunk_ce(x_c, labels_c):
+            h = rms_norm(x_c, params["final_norm"])
+            logits = jnp.einsum("btd,vd->btv", h, table).astype(
+                jnp.dtype(cfg.logits_dtype))
+            logits = softcap(logits, cfg.final_logit_softcap)
+            mask = (labels_c >= 0) & (labels_c < cfg.vocab_size)
+            safe = jnp.where(mask, labels_c, 0)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+            nll = jnp.where(mask, lse - picked, 0.0)
+            zsq = jnp.where(mask, jnp.square(lse), 0.0)
+            return nll.sum(), zsq.sum(), mask.sum()
+
+        if n_chunks == 1:
+            nll, zsq, cnt = chunk_ce(x, labels)
+        else:
+            C = S // n_chunks
+            xc = x.reshape(B, n_chunks, C, d).transpose(1, 0, 2, 3)
+            lc = labels.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+            def step(carry, inp):
+                a, b, c = jax.checkpoint(chunk_ce)(*inp)
+                return (carry[0] + a, carry[1] + b, carry[2] + c), None
+
+            (nll, zsq, cnt), _ = jax.lax.scan(
+                step,
+                (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                 jnp.zeros((), jnp.int32)),
+                (xc, lc))
+        denom = jnp.maximum(cnt, 1)
+        ce = nll / denom
+        zloss = cfg.z_loss * (zsq / denom)
+        total = ce + zloss + aux
+        return total, {"ce": ce, "z_loss": zloss, "aux": aux}

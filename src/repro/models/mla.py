@@ -1,0 +1,245 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries are (optionally) low-rank compressed; keys/values are jointly
+compressed into a ``kv_lora_rank`` latent plus a shared decoupled-RoPE
+key. Training/prefill uses the naive expansion; decode caches only
+(c_kv, k_rope) — the MLA memory win — and uses the absorbed form
+(W^UK folded into q, W^UV folded into the output) so per-step compute
+is O(r_kv), never materializing full K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import init_linear, rms_norm, rope
+
+__all__ = ["init_mla", "mla_attention", "mla_decode", "init_mla_cache"]
+
+NEG_INF = -2.0e38
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    dt = cfg.pdtype
+    p: dict = {}
+    if rq:
+        p["wq_a"] = init_linear(ks[0], d, rq, dt)
+        p["q_norm"] = jnp.zeros((rq,), jnp.float32)
+        p["wq_b"] = init_linear(ks[1], rq, H * (dn + dr), dt).reshape(rq, H, dn + dr)
+    else:
+        p["wq"] = init_linear(ks[1], d, H * (dn + dr), dt).reshape(d, H, dn + dr)
+    p["wkv_a"] = init_linear(ks[2], d, rkv + dr, dt)
+    p["kv_norm"] = jnp.zeros((rkv,), jnp.float32)
+    p["wkv_b"] = init_linear(ks[3], rkv, H * (dn + dv), dt).reshape(rkv, H, dn + dv)
+    p["wo"] = init_linear(ks[4], H * dv, d, dt).reshape(H, dv, d)
+    return p
+
+
+def _queries(params, x, cfg, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ params["wq_a"], params["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _latents(params, x, cfg, positions):
+    rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv_a = x @ params["wkv_a"]                       # (B, S, rkv + dr)
+    c_kv = rms_norm(kv_a[..., :rkv], params["kv_norm"])
+    k_rope = rope(kv_a[..., rkv:], positions, cfg.rope_theta)   # shared head
+    return c_kv, k_rope
+
+
+def mla_attention(params, x, cfg: ModelConfig, positions):
+    """Training / prefill: expanded q/k (nope‖rope) through the
+    chunked online-softmax path — the (S, S) score matrix never
+    materializes (§Perf iteration 3)."""
+    from .attention import CHUNKED_THRESHOLD, _chunked, _sdpa
+
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qn, qr = _queries(params, x, cfg, positions)
+    c_kv, k_rope = _latents(params, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"])
+    kn, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([qn, qr], axis=-1)                    # (B,S,H,dn+dr)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1)
+    scale = (dn + dr) ** -0.5
+    fn = _chunked if S > CHUNKED_THRESHOLD else _sdpa
+    out = fn(q, k, v, positions, positions, causal=True, is_global=True,
+             window=0, cap=0.0, scale=scale)
+    return jnp.einsum("bqhv,hvd->bqd", out, params["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int, dtype=None):
+    dt = dtype or cfg.cdtype
+    return {
+        "c_kv": jnp.zeros((layers, batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((layers, batch, max_len, cfg.qk_rope_head_dim), dt),
+    }
+
+
+def mla_decode_sharded(params, x_t, c_kv_cache, k_rope_cache, pos,
+                       cfg: ModelConfig):
+    """Weight-stationary, sequence-parallel MLA decode (§Perf).
+
+    The latent cache stays sharded over 'model' along S; projections
+    psum (B,1,·) activations over the ZeRO'd input dim; the absorbed
+    W^UK/W^UV (the small MLA matrices, ~33 MB) gather once per layer;
+    per-shard online-softmax states combine with O(B·H·r) psum.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.pspec import current_mesh
+    from .attention import _batch_row_start, _decode_bspec, _gather_batch, _psum_proj
+
+    mesh = current_mesh()
+    B, S = c_kv_cache.shape[0], c_kv_cache.shape[1]
+    d = cfg.d_model
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv, rq = cfg.kv_lora_rank, cfg.q_lora_rank
+    m = mesh.shape.get("model", 1)
+    dsz = mesh.shape.get("data", 1)
+    bspec = _decode_bspec(mesh, B)
+    x_spec = P(bspec, None, None)
+    cache_spec = P(bspec, "model", None)
+    d_ax = "data" if (dsz > 1 and d % dsz == 0) else None
+    h_ax = "model" if H % m == 0 else None
+
+    def body(x, wq_a, q_norm, wq_b, wkv_a, kv_norm, wkv_b, wo, ckv, kr, pos):
+        Bl = x.shape[0]
+        xg = _gather_batch(x, bspec)                     # (B_glob,1,d)
+        # -- queries --
+        if rq:
+            cq = rms_norm(_psum_proj(xg, wq_a, d), q_norm)
+            q = jnp.einsum("bsr,rhk->bshk", cq, wq_b)    # rq replicated
+        else:
+            q = _psum_proj(xg, wq_b, d)
+        if q.shape[2] != H:
+            q = jax.lax.all_gather(q, "model", axis=2, tiled=True)
+        # -- latents --
+        kv_a = _psum_proj(xg, wkv_a, d)                  # (B_glob,1,rkv+dr)
+        row0 = _batch_row_start(mesh, bspec, Bl)
+        q = jax.lax.dynamic_slice_in_dim(q, row0, Bl, axis=0)
+        kv_a = jax.lax.dynamic_slice_in_dim(kv_a, row0, Bl, axis=0)
+        posb = jnp.full((Bl, 1), pos, jnp.int32)
+        qn, qr = q[..., :dn], rope(q[..., dn:], posb, cfg.rope_theta)
+        c_t = rms_norm(kv_a[..., :rkv], kv_norm)
+        kr_t = rope(kv_a[..., rkv:], posb, cfg.rope_theta)
+        # -- masked single-row cache write on the owning S-shard --
+        S_loc = ckv.shape[1]
+        rank = jax.lax.axis_index("model")
+        start = rank * S_loc
+        slot = pos - start
+        own = (slot >= 0) & (slot < S_loc)
+        slot_c = jnp.clip(slot, 0, S_loc - 1)
+        ex_c = jax.lax.dynamic_slice_in_dim(ckv, slot_c, 1, axis=1)
+        ex_r = jax.lax.dynamic_slice_in_dim(kr, slot_c, 1, axis=1)
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            ckv, jnp.where(own, c_t.astype(ckv.dtype), ex_c), slot_c, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            kr, jnp.where(own, kr_t.astype(kr.dtype), ex_r), slot_c, 1)
+        # -- absorbed attention over local latents --
+        wkb = wkv_b
+        if wkb.shape[1] != H:                            # gather small W^UK/UV
+            wkb = jax.lax.all_gather(wkb, "model", axis=1, tiled=True)
+        wk_, wv_ = wkb[..., :dn], wkb[..., dn:]
+        q_abs = jnp.einsum("bqhc,rhc->bqhr", qn, wk_)
+        s = (jnp.einsum("bqhr,bkr->bhqk", q_abs, ckv)
+             + jnp.einsum("bqhc,bkc->bhqk", qr, kr)
+             ).astype(jnp.float32) * ((dn + dr) ** -0.5)
+        kpos = start + jnp.arange(S_loc)
+        valid = kpos[None, None, None, :] <= pos
+        s = jnp.where(valid, s, NEG_INF)
+        m_loc = s.max(axis=-1)
+        M = jax.lax.pmax(m_loc, "model")
+        p = jnp.exp(s - M[..., None])
+        l = jax.lax.psum(p.sum(axis=-1), "model")
+        lat = jax.lax.psum(
+            jnp.einsum("bhqk,bkr->bqhr", p.astype(ckv.dtype), ckv
+                       ).astype(jnp.float32), "model")
+        lat = (lat / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+               ).astype(x.dtype)
+        out = jnp.einsum("bqhr,rhv->bqhv", lat, wv_)
+        # -- output projection (weight-stationary) --
+        og = _gather_batch(out, bspec)
+        H_loc = wo.shape[0]
+        if H_loc != H:
+            o_slice = jax.lax.dynamic_slice_in_dim(og, rank * H_loc, H_loc, axis=2)
+            y = jax.lax.psum(jnp.einsum("bqhv,hvd->bqd", o_slice, wo), "model")
+        else:
+            y = jnp.einsum("bqhv,hvd->bqd", og, wo)
+        if y.shape[-1] != d:
+            y = jax.lax.all_gather(y, "data", axis=2, tiled=True)
+        y = jax.lax.dynamic_slice_in_dim(y, row0, Bl, axis=0)
+        return y, ckv, kr
+
+    wq_b_spec = P(None, h_ax, None) if rq else P(d_ax, h_ax, None)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec,
+                  (P(d_ax, None) if rq else None),
+                  (P(None) if rq else None),
+                  wq_b_spec,
+                  P(d_ax, None), P(None), P(None, h_ax, None),
+                  P(h_ax, None, d_ax),
+                  cache_spec, cache_spec, P()),
+        out_specs=(x_spec, cache_spec, cache_spec),
+        check_rep=False,
+    )
+    y, c_kv_cache, k_rope_cache = fn(
+        x_t,
+        params.get("wq_a"), params.get("q_norm"),
+        params["wq_b"] if rq else params["wq"],
+        params["wkv_a"], params["kv_norm"], params["wkv_b"], params["wo"],
+        c_kv_cache, k_rope_cache, jnp.asarray(pos, jnp.int32))
+    return y, c_kv_cache, k_rope_cache
+
+
+def mla_decode(params, x_t, c_kv_cache, k_rope_cache, pos, cfg: ModelConfig):
+    """One-token absorbed-form decode.
+
+    Returns (out, new_c_kv, new_k_rope). Cache is (B, S_max, r) — the
+    compressed latent, ~(r_kv+d_r)/(2·H·d_h) of a dense KV cache.
+    """
+    B = x_t.shape[0]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    qn, qr = _queries(params, x_t, cfg, posb)        # (B,1,H,dn/dr)
+    c_t, kr_t = _latents(params, x_t, cfg, posb)     # (B,1,rkv), (B,1,dr)
+    c_kv_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_kv_cache, c_t.astype(c_kv_cache.dtype), pos, axis=1)
+    k_rope_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_rope_cache, kr_t.astype(k_rope_cache.dtype), pos, axis=1)
+
+    wkb = params["wkv_b"]                            # (rkv, H, dn+dv)
+    wk, wv = wkb[..., :dn], wkb[..., dn:]
+    # absorb W^UK into q:  q_abs = qn · W^UK  → (B,1,H,rkv)
+    q_abs = jnp.einsum("bqhc,rhc->bqhr", qn, wk)
+    s = (
+        jnp.einsum("bqhr,bkr->bhqk", q_abs, c_kv_cache)
+        + jnp.einsum("bqhc,bkc->bhqk", qr, k_rope_cache)
+    ).astype(jnp.float32) * ((dn + dr) ** -0.5)
+    S = c_kv_cache.shape[1]
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x_t.dtype)
+    # attend over latents, then absorb W^UV on the way out
+    lat = jnp.einsum("bhqk,bkr->bqhr", p, c_kv_cache)
+    out = jnp.einsum("bqhr,rhv->bqhv", lat, wv)
+    out = jnp.einsum("bqhv,hvd->bqd", out, params["wo"])
+    return out, c_kv_cache, k_rope_cache

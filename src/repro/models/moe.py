@@ -1,0 +1,297 @@
+"""Mixture-of-Experts layer (DeepSeek-V2/V3 style).
+
+Shared expert(s) + routed experts with top-k routing. Dispatch is the
+GShard capacity algorithm expressed with shape-static gathers/scatters:
+tokens scatter into an (E, C, d) buffer (sharded expert→'model',
+capacity→'data'), per-expert FFNs run as one batched einsum local to
+the expert shard, and results gather back — XLA SPMD inserts the
+all-to-alls at the dispatch/return boundaries. Positions are computed
+with a K-step scan so the peak dispatch tensor is (T, E), never
+(T·K, E).
+
+Routing: 'softmax' (DeepSeek-V2) or 'sigmoid' (DeepSeek-V3, gate
+renormalized over the top-k). Aux load-balance loss per DeepSeek.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.pspec import current_mesh, shard
+from .common import ModelConfig
+from .layers import init_linear
+
+__all__ = ["init_moe", "moe_layer", "set_moe_impl"]
+
+# 'gather' — shape-static scatter/gather dispatch under pjit (baseline;
+#            XLA SPMD infers the collectives).
+# 'a2a'    — shard_map expert parallelism with explicit all_to_all over
+#            the 'model' axis (§Perf hillclimb; the GShard/DeepSeek EP
+#            algorithm, TPU-idiomatic).
+# 'auto'   — a2a whenever the mesh/shape divisibility allows.
+MOE_IMPL = "gather"
+
+
+def set_moe_impl(impl: str) -> None:
+    global MOE_IMPL
+    assert impl in ("gather", "a2a", "auto")
+    MOE_IMPL = impl
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype
+    p = {
+        "router": init_linear(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) / (d ** 0.5)).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) / (d ** 0.5)).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / (f ** 0.5)).astype(dt),
+    }
+    if cfg.router == "sigmoid":          # DeepSeek-V3 bias-corrected routing
+        p["router_bias"] = jnp.zeros((E,), jnp.float32)
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": init_linear(ks[4], d, fs, dt),
+            "w_up": init_linear(ks[5], d, fs, dt),
+            "w_down": init_linear(jax.random.fold_in(ks[5], 1), fs, d, dt),
+        }
+    return p
+
+
+def _positions_in_expert(idx: jnp.ndarray, E: int) -> jnp.ndarray:
+    """(T, K) expert ids → (T, K) slot positions within each expert.
+
+    K-step scan keeps peak memory at one (T, E) one-hot."""
+    T, K = idx.shape
+
+    def step(counts, idx_k):
+        oh = jax.nn.one_hot(idx_k, E, dtype=jnp.int32)          # (T, E)
+        pos = jnp.cumsum(oh, axis=0) - oh + counts[None, :]
+        pos_k = jnp.sum(pos * oh, axis=-1)
+        return counts + oh.sum(axis=0), pos_k
+
+    _, pos = jax.lax.scan(step, jnp.zeros((E,), jnp.int32), idx.T)
+    return pos.T                                                 # (T, K)
+
+
+def _route(params, xt, cfg: ModelConfig):
+    """Shared routing: (T, d) tokens → (gates, idx, probs) all (T, K|E)."""
+    E, K = cfg.num_experts, cfg.top_k
+    logits = xt.astype(jnp.float32) @ params["router"]
+    if cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]
+        gates, idx = jax.lax.top_k(sel, K)
+        gates = jnp.take_along_axis(scores, idx, axis=-1)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, K)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _a2a_applicable(cfg: ModelConfig, S: int) -> bool:
+    mesh = current_mesh()
+    if mesh is None:
+        return False
+    m = mesh.shape.get("model", 1)
+    return (m > 1 and S % m == 0 and cfg.num_experts % m == 0
+            and S >= m)
+
+
+def moe_layer(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, d) → (y, aux_loss). Dispatch impl per MOE_IMPL."""
+    if MOE_IMPL in ("a2a", "auto") and _a2a_applicable(cfg, x.shape[1]):
+        return _moe_a2a(params, x, cfg)
+    return _moe_gather(params, x, cfg)
+
+
+def _moe_a2a(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Expert parallelism via shard_map + all_to_all over 'model'.
+
+    Tokens shard (batch → pod×data, seq → model); experts shard over
+    'model'. Each device routes its T_loc tokens into an (E, C_loc, d)
+    buffer, one all_to_all swaps expert-major for source-major, local
+    FFNs run on resident expert weights (all-gathered over 'data' when
+    ZeRO-sharded), and the reverse all_to_all returns outputs — traffic
+    is O(tokens·K·d), never O(weights) or O(E·C·d) across data shards.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = current_mesh()
+    m = mesh.shape.get("model", 1)
+    dsz = mesh.shape.get("data", 1)
+    has_pod = mesh.shape.get("pod", 1) > 1
+    bax = ("pod", "data") if has_pod else ("data",)
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    # 2-D EP: experts over model×data (no weight gathers) when divisible
+    ep2d = dsz > 1 and E % (m * dsz) == 0
+    E_loc = E // (m * dsz) if ep2d else E // m
+
+    x_spec = P(bax, "model", None)
+    if ep2d:
+        w_spec = P(("model", "data"), None, None)
+        wd_spec = w_spec
+    else:
+        # E over model; d over data iff ZeRO-sharded
+        zero_d = params["w_gate"].shape[1] % max(dsz, 1) == 0 and dsz > 1
+        w_spec = P("model", "data" if zero_d else None, None)
+        wd_spec = P("model", None, "data" if zero_d else None)
+    r_spec = P(None, None)
+
+    def body(xb, router, router_bias, wg, wu, wd):
+        # xb: (B_loc, S_loc, d); w*: (E_loc, d_loc, f)
+        Bl, Sl, _ = xb.shape
+        T = Bl * Sl
+        xt = xb.reshape(T, d)
+        rparams = {"router": router}
+        if router_bias is not None:
+            rparams["router_bias"] = router_bias
+        gates, idx, probs = _route(rparams, xt, cfg)
+
+        # aux loss from *global* stats
+        f_e = jax.lax.pmean(
+            jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32).mean(axis=0),
+            axis_name=bax + ("model",))
+        p_e = jax.lax.pmean(probs.mean(axis=0), axis_name=bax + ("model",))
+        aux = cfg.aux_loss_coef * E * jnp.sum(f_e * p_e)
+
+        C = max(4, int(T * K * cfg.capacity_factor / E))
+        pos = _positions_in_expert(idx, E)
+        keep = pos < C
+        slot = jnp.where(keep, idx * C + pos, E * C)
+        xt_rep = jnp.broadcast_to(xt[:, None, :], (T, K, d)).reshape(T * K, d)
+        buf = jnp.zeros((E * C + 1, d), xb.dtype).at[slot.reshape(-1)].set(
+            xt_rep, mode="drop")[: E * C].reshape(E, C, d)
+
+        # dispatch: expert-major → (src-rank, local-expert)-major
+        if ep2d:
+            # stage 1: route E-chunks to their model rank; stage 2: to
+            # their data rank. P(('model','data')) is model-major.
+            buf = buf.reshape(m, dsz, E_loc, C, d)
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                     concat_axis=0, tiled=False)
+            # (m_src, dsz, E_loc, C, d) → exchange dsz chunks over data
+            buf = buf.transpose(1, 0, 2, 3, 4)          # (dsz, m_src, …)
+            buf = jax.lax.all_to_all(buf, "data", split_axis=0,
+                                     concat_axis=0, tiled=False)
+            # (dsz_src, m_src, E_loc, C, d)
+            buf = buf.transpose(2, 1, 0, 3, 4).reshape(E_loc, m * dsz * C, d)
+        else:
+            buf = buf.reshape(m, E_loc, C, d)
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                     concat_axis=0, tiled=False)
+            buf = buf.transpose(1, 0, 2, 3).reshape(E_loc, m * C, d)
+
+        # resident expert FFN (gather ZeRO'd d-shards once per layer —
+        # only on the 1-D EP path; 2-D EP weights are fully local)
+        if wg.shape[1] != d:
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+        if wd.shape[2] != d:
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+            "ecd,edf->ecf", buf, wu)
+        out = jnp.einsum("ecf,efd->ecd", h, wd)
+
+        # return trip (mirror of dispatch)
+        if ep2d:
+            out = out.reshape(E_loc, m, dsz, C, d).transpose(2, 1, 0, 3, 4)
+            out = jax.lax.all_to_all(out, "data", split_axis=0,
+                                     concat_axis=0, tiled=False)
+            out = out.transpose(1, 0, 2, 3, 4)          # (m, dsz, E_loc, C, d)
+            out = jax.lax.all_to_all(out, "model", split_axis=0,
+                                     concat_axis=0, tiled=False)
+            out = out.reshape(E * C, d)
+        else:
+            out = out.reshape(E_loc, m, C, d).transpose(1, 0, 2, 3)
+            out = jax.lax.all_to_all(out, "model", split_axis=0,
+                                     concat_axis=0, tiled=False)
+            out = out.reshape(E * C, d)
+        flat = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], 0)
+        y_rep = flat[slot.reshape(-1)].reshape(T, K, d)
+        y = jnp.sum(y_rep * (gates * keep).astype(xb.dtype)[..., None], axis=1)
+        return y.reshape(Bl, Sl, d), aux
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, r_spec,
+                  (P(None) if "router_bias" in params else None),
+                  w_spec, w_spec, wd_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )
+    y, aux = fn(x, params["router"], params.get("router_bias"),
+                params["w_gate"], params["w_up"], params["w_down"])
+    y = shard(y, "batch", None, None)
+    if "shared" in params:
+        sh = params["shared"]
+        xt = x.reshape(B * S, d)
+        hs = jax.nn.silu(xt @ sh["w_gate"]) * (xt @ sh["w_up"])
+        y = y + (hs @ sh["w_down"]).reshape(B, S, d)
+    return y, aux
+
+
+def _moe_gather(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, d) → (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(8, int(T * K * cfg.capacity_factor / E))
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (T, E)
+    if cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]
+        gates, idx = jax.lax.top_k(sel, K)
+        gates = jnp.take_along_axis(scores, idx, axis=-1)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, K)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss: E · Σ_e f_e · p_e  (DeepSeek / Switch)
+    f_e = jnp.zeros((E,), jnp.float32)
+    oh_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    f_e = oh_top1.mean(axis=0)
+    p_e = probs.mean(axis=0)
+    aux = cfg.aux_loss_coef * E * jnp.sum(f_e * p_e)
+
+    pos = _positions_in_expert(idx, E)                            # (T, K)
+    keep = pos < C
+    slot = jnp.where(keep, idx * C + pos, E * C)                  # E*C = drop bin
+
+    # scatter tokens → (E·C, d) dispatch buffer (unique slots ⇒ set ok)
+    xt_rep = jnp.broadcast_to(xt[:, None, :], (T, K, d)).reshape(T * K, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot.reshape(-1)].set(
+        xt_rep, mode="drop"
+    )[: E * C]
+    buf = shard(buf.reshape(E, C, d), "expert", "capacity", None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, params["w_up"]
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out = shard(out, "expert", "capacity", None)
+
+    # gather back and combine with gates
+    flat = jnp.concatenate([out.reshape(E * C, d), jnp.zeros((1, d), out.dtype)], 0)
+    y_rep = flat[slot.reshape(-1)].reshape(T, K, d)
+    y = jnp.sum(y_rep * (gates * keep).astype(x.dtype)[..., None], axis=1)
+    y = y.reshape(B, S, d)
+    y = shard(y, "batch", None, None)
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(xt @ sh["w_gate"]) * (xt @ sh["w_up"])
+        y = y + (hs @ sh["w_down"]).reshape(B, S, d)
+    return y, aux

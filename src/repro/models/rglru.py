@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The gated linear recurrence  h_t = a_t·h_{t−1} + √(1−a_t²)·(i_t⊙x_t)
+with a_t = exp(−c·softplus(Λ)·r_t) is elementwise over the width, so it
+parallelizes over TPU lanes and — being associative — runs as a
+``jax.lax.associative_scan`` (log-depth) for train/prefill, and as a
+single fused step for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import init_linear
+
+__all__ = ["init_rglru", "rglru_forward", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width_
+    ks = jax.random.split(key, 6)
+    dt = cfg.pdtype
+    return {
+        "w_x": init_linear(ks[0], d, w, dt),        # recurrence branch in-proj
+        "w_gate": init_linear(ks[1], d, w, dt),     # GeLU gate branch
+        "conv_w": (jax.random.normal(ks[2], (4, w), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_r": init_linear(ks[3], w, w, dt),        # recurrence gate
+        "w_i": init_linear(ks[4], w, w, dt),        # input gate
+        "lam": jnp.linspace(0.7, 2.5, w).astype(jnp.float32),  # Λ
+        "out": init_linear(ks[5], w, d, dt),
+    }
+
+
+def _conv(x, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)) \
+        + b[None, None, :].astype(x.dtype)
+
+
+def _gates(params, xw):
+    r = jax.nn.sigmoid((xw @ params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xw @ params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8))
+    gated = beta * i * xw.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d) → (B, S, d) via associative scan over S."""
+    xw = _conv(x @ params["w_x"], params["conv_w"], params["conv_b"])
+    a, gated = _gates(params, xw)                    # (B,S,w) f32
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32), approximate=True)
+    y = (h * gate).astype(x.dtype)
+    return y @ params["out"]
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, layers: int) -> dict:
+    w = cfg.lru_width_
+    return {
+        "h": jnp.zeros((layers, batch, w), jnp.float32),
+        "conv": jnp.zeros((layers, batch, 3, w), cfg.cdtype),
+    }
+
+
+def rglru_decode(params: dict, x_t: jnp.ndarray, h, conv_cache, cfg: ModelConfig):
+    """One-step recurrence. x_t: (B,1,d); h: (B,w); conv: (B,3,w)."""
+    xw_t = x_t @ params["w_x"]                        # (B,1,w)
+    hist = jnp.concatenate([conv_cache, xw_t.astype(conv_cache.dtype)], axis=1)
+    w = params["conv_w"]
+    xw = (
+        jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w.astype(jnp.float32))
+        + params["conv_b"]
+    )[:, None, :].astype(x_t.dtype)
+    conv_cache = hist[:, 1:, :]
+    a, gated = _gates(params, xw)                     # (B,1,w)
+    h = a[:, 0] * h + gated[:, 0]
+    gate = jax.nn.gelu((x_t @ params["w_gate"]).astype(jnp.float32), approximate=True)
+    y = (h[:, None, :] * gate).astype(x_t.dtype)
+    return y @ params["out"], h, conv_cache

@@ -1,0 +1,176 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk terms are
+a masked (decay-weighted) attention-like quadratic over the chunk, and
+cross-chunk terms flow through a linear recurrence over chunk states —
+O(S·Q) compute with constant state. Decode is the pure recurrence with
+an (H, P, N) state and a small causal-conv cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import init_linear, rms_norm
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_decode", "init_mamba_cache"]
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din, H, P, N, G = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = din + 2 * G * N
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * din + 2 * G * N + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), jnp.float32) * 0.02).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": init_linear(ks[2], din, d, dt),
+    }
+
+
+def _split(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    din, H, N, G = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    z, xBC, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over the sequence. xBC: (B, S, Cd); w: (W, Cd)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b[None, None, :].astype(out.dtype))
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular cumulative sums: out[..., i, j] = Σ_{j<k≤i} x[k]."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def mamba_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Chunked SSD. x: (B, S, d) → (B, S, d). S must divide by ssm_chunk."""
+    Bsz, S, _ = x.shape
+    din, H, P, N, G = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt_raw = _split(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bmat, Cmat = jnp.split(xBC, [din, din + G * N], axis=-1)
+    xs = xs.reshape(Bsz, S, H, P)
+    Bmat = Bmat.reshape(Bsz, S, G, N)
+    Cmat = Cmat.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                            # (H,)
+    dA = dt * A[None, None, :]                                               # (B,S,H)
+
+    # chunk everything: (B, nc, Q, ...)
+    xs_c = xs.reshape(Bsz, nc, Q, H, P)
+    B_c = Bmat.reshape(Bsz, nc, Q, G, N)
+    C_c = Cmat.reshape(Bsz, nc, Q, G, N)
+    dt_c = dt.reshape(Bsz, nc, Q, H)
+    dA_c = dA.reshape(Bsz, nc, Q, H)
+
+    # ---- intra-chunk (diagonal blocks): decay-masked attention ----
+    L = jnp.exp(_segsum(dA_c.transpose(0, 1, 3, 2)))           # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", C_c, B_c)        # (B,nc,G,Q,Q)
+    rep = H // G
+    scores = jnp.repeat(scores, rep, axis=2)                   # (B,nc,H,Q,Q)
+    att = (scores * L).astype(x.dtype)
+    xdt = xs_c * dt_c[..., None].astype(x.dtype)               # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att, xdt)
+
+    # ---- chunk states & inter-chunk recurrence ----
+    seg_end = jnp.cumsum(dA_c, axis=2)                         # (B,nc,Q,H)
+    decay_to_end = jnp.exp(seg_end[:, :, -1:, :] - seg_end)    # (B,nc,Q,H)
+    B_rep = jnp.repeat(B_c, rep, axis=3)                       # (B,nc,Q,H,N)
+    states = jnp.einsum(
+        "bcqhn,bcqhp->bchpn",
+        B_rep,
+        (xdt * decay_to_end[..., None].astype(x.dtype)),
+    )                                                          # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(seg_end[:, :, -1, :])                # (B,nc,H)
+
+    def inter(carry, inp):
+        st, dec = inp                                          # (B,H,P,N), (B,H)
+        out = carry
+        carry = carry * dec[..., None, None].astype(carry.dtype) + st
+        return carry, out                                      # state BEFORE chunk
+
+    init = jnp.zeros((Bsz, H, P, N), x.dtype)
+    _, prev_states = jax.lax.scan(
+        inter, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+
+    # ---- off-diagonal contribution: C · decayed previous state ----
+    decay_from_start = jnp.exp(seg_end)                        # (B,nc,Q,H)
+    C_rep = jnp.repeat(C_c, rep, axis=3)                       # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", C_rep, prev_states)
+    y_off = y_off * decay_from_start[..., None].astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + xs * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, S, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, layers: int, dtype=None) -> dict:
+    dt = dtype or cfg.cdtype
+    din, H, P, N, G = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = din + 2 * G * N
+    return {
+        "conv": jnp.zeros((layers, batch, cfg.ssm_conv_width - 1, conv_dim), dt),
+        "state": jnp.zeros((layers, batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, x_t: jnp.ndarray, conv_cache, state, cfg: ModelConfig):
+    """One-token recurrence. x_t: (B,1,d); returns (y, conv_cache, state)."""
+    Bsz = x_t.shape[0]
+    din, H, P, N, G = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_ngroups
+    zxbcdt = x_t @ params["in_proj"]
+    z, xBC_t, dt_raw = _split(cfg, zxbcdt)                     # (B,1,·)
+    # causal conv via cache of the last W−1 inputs
+    hist = jnp.concatenate([conv_cache, xBC_t.astype(conv_cache.dtype)], axis=1)
+    w = params["conv_w"]
+    xBC = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w.astype(jnp.float32))
+        + params["conv_b"]
+    )[:, None, :].astype(x_t.dtype)
+    conv_cache = hist[:, 1:, :]
+
+    xs, Bmat, Cmat = jnp.split(xBC, [din, din + G * N], axis=-1)
+    xs = xs.reshape(Bsz, H, P)
+    Bv = Bmat.reshape(Bsz, G, N)
+    Cv = Cmat.reshape(Bsz, G, N)
+    rep = H // G
+    Bv = jnp.repeat(Bv, rep, axis=1)                           # (B,H,N)
+    Cv = jnp.repeat(Cv, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])                           # (B,H)
+    upd = jnp.einsum("bhp,bhn->bhpn", xs.astype(jnp.float32) * dt[..., None], Bv.astype(jnp.float32))
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cv.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(Bsz, 1, din).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    return y @ params["out_proj"], conv_cache, state

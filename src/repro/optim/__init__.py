@@ -1,0 +1,12 @@
+"""Optimizer substrate: AdamW (+f32 moments), schedules, clipping,
+error-feedback int8 gradient compression for cross-pod sync."""
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .clip import clip_by_global_norm
+from .compress import ef_int8_allreduce, quantize_int8, dequantize_int8
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "cosine_schedule", "linear_warmup_cosine", "clip_by_global_norm",
+    "ef_int8_allreduce", "quantize_int8", "dequantize_int8",
+]

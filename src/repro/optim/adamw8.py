@@ -1,0 +1,98 @@
+"""Block-wise int8-quantized AdamW moments (8-bit-Adam style).
+
+Moments are stored int8 with one f32 scale per block. Blocks tile the
+parameter's LAST axis (largest divisor ≤ 256), so the quantized state
+has shape ``param.shape[:-1] + (nb, b)`` and **inherits the parameter's
+sharding** — de/re-quantization is purely local reshaping, never a
+cross-shard re-layout (a flat layout costs a full all-gather per leaf;
+measured 7.4 TB/device on deepseek-v3 before this fix). The second
+moment is stored as sqrt(v): quantizing in sqrt-domain preserves
+relative precision across v's orders of magnitude.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import AdamWConfig
+
+__all__ = ["adamw8_init", "adamw8_update", "block_size"]
+
+_TARGET_BLOCK = 256
+
+
+def block_size(last_dim: int) -> int:
+    """Largest divisor of last_dim ≤ 256 (no padding, ever).
+
+    When the dim is 16-divisible (i.e. potentially mesh-sharded) the
+    block count nb = last_dim/b is kept 16-divisible too, so the
+    quantized state shards exactly like the parameter."""
+    cands = [b for b in range(min(_TARGET_BLOCK, last_dim), 0, -1)
+             if last_dim % b == 0]
+    if last_dim % 16 == 0 and last_dim >= 1024:   # mesh-shardable dims
+        for b in cands:
+            if (last_dim // b) % 16 == 0 and b >= 64:
+                return b
+        for b in cands:
+            if (last_dim // b) % 16 == 0:
+                return b
+    return cands[0] if cands else 1
+
+
+def _quantize(x32: jnp.ndarray) -> dict:
+    """param-shaped f32 → {q int8 (..., nb, b), scale f32 (..., nb)}."""
+    last = x32.shape[-1]
+    b = block_size(last)
+    xb = x32.reshape(x32.shape[:-1] + (last // b, b))
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _dequantize(m: dict, shape) -> jnp.ndarray:
+    x = m["q"].astype(jnp.float32) * m["scale"][..., None]
+    return x.reshape(shape)
+
+
+def adamw8_init(params) -> dict:
+    def zeros(p):
+        last = p.shape[-1] if p.ndim else 1
+        b = block_size(max(last, 1))
+        qshape = tuple(p.shape[:-1]) + (max(last, 1) // b, b)
+        return {"q": jnp.zeros(qshape, jnp.int8),
+                "scale": jnp.zeros(qshape[:-1], jnp.float32)}
+
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw8_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mq, vq, p):
+        shape = p.shape if p.ndim else (1,)
+        g32 = g.astype(jnp.float32).reshape(shape)
+        m = cfg.b1 * _dequantize(mq, shape) + (1 - cfg.b1) * g32
+        v = cfg.b2 * jnp.square(_dequantize(vq, shape)) + (1 - cfg.b2) * jnp.square(g32)
+        delta = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta.reshape(p.shape)).astype(p.dtype)
+        return new_p, _quantize(m), _quantize(jnp.sqrt(v))
+
+    is_qleaf = lambda x: isinstance(x, dict) and "q" in x
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_qleaf)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_qleaf)[0]
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mdef = jax.tree.structure(state["m"], is_leaf=is_qleaf)
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = mdef.unflatten([o[1] for o in out])
+    new_v = mdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

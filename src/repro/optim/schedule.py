@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine"]
+
+
+def cosine_schedule(step, total_steps: int, peak: float, floor: float = 0.0):
+    frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int, peak: float,
+                         floor: float = 0.0):
+    step = step.astype(jnp.float32)
+    warm = peak * step / max(warmup, 1)
+    cos = cosine_schedule(step - warmup, max(total_steps - warmup, 1), peak, floor)
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,108 @@
+"""Logical-axis sharding (MaxText-style) with divisibility fallback.
+
+Model code annotates tensors with *logical* axes (``shard(x, 'batch',
+'seq', 'embed')``). A runtime context maps logical axes to mesh axes;
+outside a context the annotation is a no-op, so models run unsharded on
+CPU for smoke tests. A logical axis silently drops to replicated when
+the dim size does not divide the mesh axes (e.g. 10 heads on a 16-way
+'model' axis) — the honest fallback shows up in the dry-run memory
+report rather than failing to compile.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["logical_axis_rules", "shard", "spec_for", "DEFAULT_RULES", "current_mesh"]
+
+_state = threading.local()
+
+# logical axis → preferred mesh axes (first that divides wins; tuples
+# mean "shard over the product of these axes").
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (("model",),),               # decode KV-cache sequence sharding
+    "embed": (("data",),),              # FSDP: param d_in over data
+    "heads": (("model",),),
+    "kv": (("model",),),
+    "ff": (("model",),),
+    "vocab": (("model",),),
+    "expert": (("model",),),
+    "capacity": (("data",),),
+    "lru": (("model",),),
+    "ssm_heads": (("model",),),
+    "image": (),
+    "layers": (),
+    "none": (),
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Optional[dict] = None):
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _manual_axes() -> frozenset:
+    """Axes already consumed by an enclosing shard_map (Manual) — they
+    must not appear in sharding constraints inside that region."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return frozenset(
+            name for name, t in zip(am.axis_names, am.axis_types)
+            if "Manual" in str(t))
+    except Exception:  # noqa: BLE001 — no abstract mesh outside traces
+        return frozenset()
+
+
+def _resolve(mesh: Mesh, dim: int, logical: Optional[str]):
+    """Pick the first rule candidate whose mesh-axis product divides dim."""
+    if logical is None:
+        return None
+    rules = getattr(_state, "rules", DEFAULT_RULES)
+    manual = _manual_axes()
+    for cand in rules.get(logical, ()):
+        axes = tuple(a for a in cand if a in mesh.shape and a not in manual)
+        if not axes:
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if size > 1 and dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+    assert len(shape) == len(axes), (shape, axes)
+    used: set[str] = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        r = _resolve(mesh, dim, ax)
+        flat = (r if isinstance(r, tuple) else (r,)) if r else ()
+        if any(a in used for a in flat):
+            r = None
+        used.update(flat)
+        parts.append(r)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]):
+    """Constrain ``x``'s sharding by logical axes; no-op without a context."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,50 @@
+"""serve_step builder: one decode step against a persistent KV cache."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import LM, decode
+from . import sharding as shlib
+
+__all__ = ["build_serve_step", "abstract_cache"]
+
+
+def abstract_cache(lm: LM, batch: int, max_len: int):
+    """ShapeDtypeStruct cache tree (no allocation). Frontends pass
+    abstract embeds; encdec/vlm cross caches derive via eval_shape."""
+    cfg = lm.cfg
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), cfg.cdtype)
+    if cfg.family == "encdec":
+        kw["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, max_len, cfg.d_model), cfg.cdtype)
+
+    params_abs = lm.abstract_params()
+
+    def mk(params, **embeds):
+        return decode.init_cache(lm, batch, max_len, params=params, **embeds)
+
+    return jax.eval_shape(mk, params_abs, **kw)
+
+
+def build_serve_step(lm: LM, mesh: Mesh, batch: int, max_len: int):
+    """Returns (serve_step, (params_sh, cache_sh, tok_sh, pos_sh))."""
+    params_abs = lm.abstract_params()
+    params_sh = shlib.named(mesh, shlib.param_specs(mesh, params_abs, serve=True))
+    cache_abs = abstract_cache(lm, batch, max_len)
+    cache_sh = shlib.named(mesh, shlib.cache_specs(mesh, cache_abs, batch))
+    tok_sh = shlib.named(mesh, shlib.batch_specs(
+        mesh, jax.ShapeDtypeStruct((batch, 1), jnp.int32)))
+    pos_sh = NamedSharding(mesh, P())
+
+    def serve_step(params, cache, tokens_t, pos):
+        logits, cache = decode.decode_step(lm, params, tokens_t, cache, pos)
+        return logits, cache
+
+    return serve_step, (params_sh, cache_sh, tok_sh, pos_sh), cache_abs

@@ -1,0 +1,224 @@
+"""Sharding-spec derivation for parameters, optimizer state, batches
+and decode caches.
+
+Policy (TP × ZeRO-3, pods pure-DP):
+  • params: the largest mesh-divisible dim shards over 'model'
+    (Megatron TP), the next over 'data' (ZeRO-3 / FSDP — with scanned
+    layers this is exactly per-layer all-gather). Replicated over
+    'pod' (cross-pod sync is gradient-only, optionally compressed).
+  • leading scan-stack dims are never sharded.
+  • batches: global batch over ('pod','data').
+  • caches: the batch-sized dim → 'data'; the longest remaining
+    divisible dim (the KV sequence) → 'model' — sequence-sharded KV
+    so a 500k-token cache divides across the pod.
+Indivisible dims fall back to replicated (visible in the dry-run
+memory report, not a compile failure).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "named", "tree_shardings"]
+
+# leading stacked-layer dims per top-level param group
+_STACK_DIMS = {
+    "blocks": 1, "self_blocks": 2, "cross_blocks": 1,
+    "dense_blocks": 1, "moe_blocks": 1, "rec_blocks": 2, "attn_blocks": 1,
+    "extra_rec": 1, "enc_blocks": 1, "dec_self": 1, "dec_cross": 1,
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+# Semantic per-dim roles by leaf name: 'out' = output-feature dim →
+# 'model' (Megatron column/row parallel); 'in' = input-feature dim →
+# 'data' (ZeRO-3: gathered per layer, never a sharded contraction that
+# would all-reduce activations). Keyed (name, ndim-after-stack).
+_ROLE_RULES: dict[tuple[str, int], tuple] = {
+    ("wq", 3): ("in", "out", None), ("wk", 3): ("in", "out", None),
+    ("wv", 3): ("in", "out", None), ("wo", 3): ("out", None, "in"),
+    ("w_gate", 2): ("in", "out"), ("w_up", 2): ("in", "out"),
+    ("w_down", 2): ("out", "in"),
+    # MoE experts: E is expert-parallel over 'model'
+    ("w_gate", 3): ("out", "in", None), ("w_up", 3): ("out", "in", None),
+    ("w_down", 3): ("out", None, "in"),
+    ("embed", 2): ("out", "in"), ("unembed", 2): ("out", "in"),
+    ("router", 2): ("in", None),
+    ("wq_a", 2): ("in", None), ("wq_b", 3): (None, "out", None),
+    ("wkv_a", 2): ("in", None), ("wkv_b", 3): (None, "out", None),
+    ("in_proj", 2): ("in", "out"), ("out_proj", 2): ("out", "in"),
+    ("conv_w", 2): (None, "out"),
+    ("w_x", 2): ("in", "out"), ("w_r", 2): (None, "out"),
+    ("w_i", 2): (None, "out"), ("out", 2): ("out", "in"),
+}
+
+
+def _param_spec(mesh: Mesh, path: tuple, leaf, zero3: bool) -> P:
+    keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    stack = _STACK_DIMS.get(keys[0], 0) if keys else 0
+    shape = leaf.shape
+    n = len(shape)
+    body = n - stack
+    assign: list[Optional[str]] = [None] * n
+    model, data = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    role_axis = {"out": ("model", model), "in": ("data", data)}
+    name = keys[-1] if keys else ""
+    # routed experts: 2-D expert parallelism when E divides the whole
+    # (model×data) mesh — weights fully resident, no per-layer gathers
+    if ("moe" in keys and name in ("w_gate", "w_up", "w_down") and body == 3
+            and model * data > 1 and shape[stack] % max(model * data, 1) == 0):
+        assign[stack] = ("model", "data")
+        return P(*assign)
+    roles = _ROLE_RULES.get((name, body))
+    if roles is None and body >= 2:
+        # default: last dim column-parallel, first body dim ZeRO-sharded
+        roles = ("in",) + (None,) * (body - 2) + ("out",)
+    if roles:
+        for i, role in enumerate(roles):
+            if role is None:
+                continue
+            if role == "in" and not zero3:
+                continue        # small models replicate over 'data'
+            ax, sz = role_axis[role]
+            dim = stack + i
+            if sz > 1 and shape[dim] % sz == 0 and shape[dim] >= sz:
+                assign[dim] = ax
+    return P(*assign)
+
+
+# Serving keeps params TP-only (replicated over 'data' → no per-layer
+# gathers on the latency path) while bf16 params fit this budget.
+_SERVE_ZERO3_BUDGET = 8 * 2**30
+
+
+def needs_zero3(mesh: Mesh, abstract_params, *, serve: bool = False) -> bool:
+    """Training always ZeRO-shards (optimizer moments dominate memory);
+    serving shards over 'data' only when TP-only params don't fit."""
+    if not serve:
+        return True
+    n_params = sum(
+        float(np.prod(l.shape)) for l in jax.tree.leaves(abstract_params))
+    model = max(_axis_size(mesh, "model"), 1)
+    return 2.0 * n_params / model > _SERVE_ZERO3_BUDGET
+
+
+def param_specs(mesh: Mesh, abstract_params, zero3: Optional[bool] = None,
+                *, serve: bool = False) -> Any:
+    """PartitionSpec pytree matching an abstract param tree."""
+    if zero3 is None:
+        zero3 = needs_zero3(mesh, abstract_params, serve=serve)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(mesh, path, leaf, zero3), abstract_params)
+
+
+def opt_specs(mesh: Mesh, abstract_opt, pspecs) -> Any:
+    """Moments share the param specs; scalars replicate."""
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def opt8_specs(mesh: Mesh, abstract_opt, pspecs) -> Any:
+    """int8-moment state inherits the parameter sharding: the last
+    param dim splits into (nb, b) — its mesh axis rides on nb."""
+
+    def spec_pair(pspec: P, mleaf: dict) -> dict:
+        # pspec aligned to param dims == q dims − 1; the last param
+        # dim's axis rides on nb, the b dim is always local
+        plist = list(pspec)
+        while len(plist) < mleaf["q"].ndim - 1:
+            plist.append(None)
+        # defensive: drop axes that no longer divide the block layout
+        for i, ax in enumerate(plist):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape.get(a, 1)
+            if mleaf["q"].shape[i] % size != 0:
+                plist[i] = None
+        return {
+            "q": P(*plist[:-1], plist[-1], None),
+            "scale": P(*plist),
+        }
+
+    is_qleaf = lambda x: isinstance(x, dict) and "q" in x
+    m_specs = jax.tree.map(
+        spec_pair, pspecs, abstract_opt["m"],
+        is_leaf=lambda x: isinstance(x, P) or is_qleaf(x))
+    v_specs = jax.tree.map(
+        spec_pair, pspecs, abstract_opt["v"],
+        is_leaf=lambda x: isinstance(x, P) or is_qleaf(x))
+    return {"m": m_specs, "v": v_specs, "step": P()}
+
+
+def batch_specs(mesh: Mesh, abstract_batch, *, pod_manual: bool = False) -> Any:
+    """pod_manual: the train step takes the 'pod' axis manual (grad
+    compression) — a dim cannot mix manual and auto axes, so the batch
+    enters data-sharded only and shard_map slices the pod dim itself."""
+    pod, data = _axis_size(mesh, "pod"), _axis_size(mesh, "data")
+
+    def spec(leaf):
+        B = leaf.shape[0]
+        if not pod_manual and pod > 1 and B % (pod * data) == 0:
+            bx: Any = ("pod", "data")
+        elif B % data == 0 and data > 1:
+            bx = "data"
+        else:
+            bx = None
+        return P(bx, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, abstract_batch)
+
+
+def cache_specs(mesh: Mesh, abstract_cache, batch_size: int) -> Any:
+    model, data = _axis_size(mesh, "model"), _axis_size(mesh, "data")
+    pod = _axis_size(mesh, "pod")
+
+    def spec(leaf):
+        shape = leaf.shape
+        assign: list[Optional[str]] = [None] * len(shape)
+        # batch dim: first dim equal to batch_size (skip when B == 1)
+        bdim = None
+        if batch_size > 1:
+            for i, s in enumerate(shape):
+                if s != batch_size:
+                    continue
+                if pod > 1 and s % (pod * data) == 0:
+                    bdim = i
+                    assign[i] = ("pod", "data")
+                elif data > 1 and s % data == 0:
+                    bdim = i
+                    assign[i] = "data"
+                if bdim is not None:
+                    break
+        # sequence (or widest) dim over 'model'
+        order = sorted(
+            (i for i in range(len(shape)) if i != bdim),
+            key=lambda i: -shape[i])
+        for i in order:
+            if model > 1 and shape[i] % model == 0 and shape[i] >= model:
+                assign[i] = "model"
+                break
+        return P(*assign)
+
+    return jax.tree.map(spec, abstract_cache)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def tree_shardings(mesh: Mesh, abstract_tree, spec_fn) -> Any:
+    return named(mesh, spec_fn(mesh, abstract_tree))

@@ -1,0 +1,4 @@
+"""Serving substrate: continuous batching driven by DIANA queues."""
+from .engine import InferenceRequest, ServingEngine, EngineStats
+
+__all__ = ["InferenceRequest", "ServingEngine", "EngineStats"]

@@ -1,0 +1,341 @@
+"""MONARC-style discrete-event grid simulator (paper §XI test-bed).
+
+Five policies are simulated over the same event stream:
+
+  'diana'   — §IV/§V cost-based placement + §X multilevel feedback
+              queues + §IX congestion-driven migration
+  'greedy'  — submit to the resource with most free slots, no global
+              cost view (the strawman in §I)
+  'local'   — always run at the submission site, move data to the job
+              (MyGrid-style, §III)
+  'fcfs'    — one central FCFS queue over all sites (EGEE-WMS-like
+              baseline used for comparison in §XI)
+
+Each site has N single-job nodes (§II: a subjob uses one CPU). A job's
+wall time on a node = pure work + input fetch (if the dataset is
+remote) + output return (if the user is remote) — exactly the cost
+structure DIANA optimizes and the baselines ignore.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (
+    CostWeights,
+    Job,
+    MultilevelFeedbackQueues,
+    NetworkLink,
+    PeerView,
+    SiteState,
+    computation_cost,
+    network_cost,
+    select_peer,
+)
+from repro.core.migration import apply_migration
+from .workloads import SimJob
+
+__all__ = ["GridSim", "SimResult", "uniform_links"]
+
+
+def uniform_links(
+    sites: list[str],
+    bandwidth_Bps: float = 1e9,
+    loss_rate: float = 0.001,
+    local_bandwidth_Bps: float = 10e9,
+) -> dict[tuple[str, str], NetworkLink]:
+    links: dict[tuple[str, str], NetworkLink] = {}
+    for a in sites:
+        for b in sites:
+            if a == b:
+                links[(a, b)] = NetworkLink(bandwidth_Bps=local_bandwidth_Bps, loss_rate=0.0)
+            else:
+                links[(a, b)] = NetworkLink(bandwidth_Bps=bandwidth_Bps, loss_rate=loss_rate)
+    return links
+
+
+@dataclass
+class SimResult:
+    jobs: list[SimJob]
+    # site → time-bucket → counters (Fig 9/10/11 series)
+    timeline: dict[str, dict[str, list[int]]]
+    bucket_s: float
+    policy: str
+
+    @property
+    def avg_queue_time(self) -> float:
+        done = [j for j in self.jobs if j.finish >= 0]
+        return float(np.mean([j.queue_time for j in done])) if done else 0.0
+
+    @property
+    def avg_exec_time(self) -> float:
+        done = [j for j in self.jobs if j.finish >= 0]
+        return float(np.mean([j.exec_time for j in done])) if done else 0.0
+
+    @property
+    def avg_turnaround(self) -> float:
+        done = [j for j in self.jobs if j.finish >= 0]
+        return float(np.mean([j.turnaround for j in done])) if done else 0.0
+
+    @property
+    def makespan(self) -> float:
+        done = [j for j in self.jobs if j.finish >= 0]
+        return max((j.finish for j in done), default=0.0)
+
+    @property
+    def throughput(self) -> float:
+        m = self.makespan
+        return len([j for j in self.jobs if j.finish >= 0]) / m if m > 0 else 0.0
+
+    def migrations(self) -> int:
+        return sum(1 for j in self.jobs if j.migrated)
+
+
+class _Site:
+    def __init__(self, name: str, nodes: int, quotas: dict[str, float], use_mlfq: bool):
+        self.name = name
+        self.nodes = nodes
+        self.busy = 0
+        self.use_mlfq = use_mlfq
+        self.mlfq = MultilevelFeedbackQueues(quotas=dict(quotas))
+        self.fifo: list[Job] = []
+        self.running_work = 0.0
+
+    # queue ops ------------------------------------------------------------
+    def enqueue(self, cj: Job, now: float) -> None:
+        if self.use_mlfq:
+            self.mlfq.submit(cj, now=now)
+        else:
+            self.fifo.append(cj)
+
+    def pop(self, now: float) -> Optional[Job]:
+        if self.use_mlfq:
+            return self.mlfq.pop_next(now=now)
+        return self.fifo.pop(0) if self.fifo else None
+
+    def queue_len(self) -> int:
+        return len(self.mlfq) if self.use_mlfq else len(self.fifo)
+
+    def queued_work(self) -> float:
+        jobs = self.mlfq.jobs if self.use_mlfq else self.fifo
+        return sum(j.compute_work for j in jobs)
+
+    def state(self) -> SiteState:
+        return SiteState(
+            name=self.name,
+            capacity=float(self.nodes),
+            queue_length=float(self.queue_len()),
+            waiting_work=self.queued_work() + self.running_work,
+            load=self.busy / self.nodes,
+            free_slots=float(self.nodes - self.busy),
+        )
+
+
+class GridSim:
+    """Deterministic event-driven simulation of one policy over a grid."""
+
+    def __init__(
+        self,
+        site_nodes: dict[str, int],
+        links: Optional[dict[tuple[str, str], NetworkLink]] = None,
+        policy: str = "diana",
+        quotas: Optional[dict[str, float]] = None,
+        migration_interval_s: float = 60.0,
+        congestion_window_s: float = 300.0,
+        weights: CostWeights = CostWeights(w_queue=0.0, w_work=1.0, w_load=0.0),
+        bucket_s: float = 60.0,
+    ):
+        assert policy in ("diana", "greedy", "local", "fcfs")
+        self.policy = policy
+        self.links = links or uniform_links(list(site_nodes))
+        self.quotas = quotas or {}
+        self.weights = weights
+        self.migration_interval_s = migration_interval_s
+        self.congestion_window_s = congestion_window_s
+        self.bucket_s = bucket_s
+        self.sites = {
+            name: _Site(name, n, self.quotas, use_mlfq=(policy == "diana"))
+            for name, n in site_nodes.items()
+        }
+        self.central_fifo: list[Job] = []  # fcfs policy only
+        self._cj2sj: dict[int, SimJob] = {}
+        self._seq = itertools.count()
+        self.timeline: dict[str, dict[str, list[int]]] = {
+            s: {"submitted": [], "executed": [], "exported": [], "imported": []}
+            for s in self.sites
+        }
+
+    # -- cost model (§IV on simulator state) --------------------------------
+    def _eff_bw(self, a: str, b: str) -> float:
+        return self.links[(a, b)].effective_bandwidth()
+
+    def placement_cost(self, sj: SimJob, site: str) -> float:
+        st = self.sites[site].state()
+        net = network_cost(self.links[(sj.origin_site, site)])
+        comp = computation_cost(st, self.weights) + sj.work / st.capacity
+        dtc = 0.0
+        if sj.data_site is not None and sj.data_site != site:
+            dtc += sj.input_bytes / self._eff_bw(sj.data_site, site)
+        if sj.origin_site != site:
+            dtc += sj.output_bytes / self._eff_bw(site, sj.origin_site)
+        return net + comp + dtc
+
+    def _service_seconds(self, sj: SimJob, site: str) -> float:
+        dur = sj.work
+        if sj.data_site is not None and sj.data_site != site:
+            dur += sj.input_bytes / self._eff_bw(sj.data_site, site)
+        if sj.origin_site != site:
+            dur += sj.output_bytes / self._eff_bw(site, sj.origin_site)
+        return dur
+
+    # -- placement policies --------------------------------------------------
+    def choose_site(self, sj: SimJob) -> str:
+        if self.policy == "local":
+            return sj.origin_site
+        if self.policy == "greedy":
+            return max(
+                self.sites.values(),
+                key=lambda s: (s.nodes - s.busy - s.queue_len(), s.nodes),
+            ).name
+        # diana — §V: ascending total cost, first alive site.
+        costs = sorted(
+            (self.placement_cost(sj, name), name) for name in self.sites
+        )
+        return costs[0][1]
+
+    # -- simulation ------------------------------------------------------------
+    def run(self, jobs: list[SimJob], until: Optional[float] = None) -> SimResult:
+        events: list[tuple[float, int, str, object]] = []
+        for sj in jobs:
+            heapq.heappush(events, (sj.arrival, next(self._seq), "arrive", sj))
+        if self.policy == "diana" and jobs:
+            t0 = min(j.arrival for j in jobs)
+            heapq.heappush(
+                events,
+                (t0 + self.migration_interval_s, next(self._seq), "migrate", None),
+            )
+        horizon = until if until is not None else float("inf")
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if now > horizon:
+                break
+            if kind == "arrive":
+                self._on_arrive(payload, now, events)
+            elif kind == "finish":
+                site_name, cj = payload
+                self._on_finish(site_name, cj, now, events)
+            elif kind == "migrate":
+                self._on_migrate_check(now, events)
+                if any(s.queue_len() for s in self.sites.values()) or any(
+                    e[2] == "arrive" for e in events
+                ):
+                    heapq.heappush(
+                        events,
+                        (now + self.migration_interval_s, next(self._seq), "migrate", None),
+                    )
+        return SimResult(
+            jobs=jobs, timeline=self.timeline, bucket_s=self.bucket_s, policy=self.policy
+        )
+
+    # -- handlers ------------------------------------------------------------
+    def _bucket(self, site: str, key: str, now: float) -> None:
+        series = self.timeline[site][key]
+        idx = int(now / self.bucket_s)
+        while len(series) <= idx:
+            series.append(0)
+        series[idx] += 1
+
+    def _on_arrive(self, sj: SimJob, now: float, events: list) -> None:
+        target = self.choose_site(sj)
+        sj.exec_site = target
+        sj.queue_enter = now
+        cj = Job(
+            user=sj.user, t=sj.t, submit_time=now, compute_work=sj.work,
+            input_bytes=sj.input_bytes, output_bytes=sj.output_bytes,
+            group_id=sj.group_id,
+        )
+        self._cj2sj[cj.job_id] = sj
+        self._bucket(target, "submitted", now)
+        if self.policy == "fcfs":
+            self.central_fifo.append(cj)
+            self._dispatch_central(now, events)
+        else:
+            self.sites[target].enqueue(cj, now)
+            self._dispatch(target, now, events)
+
+    def _start(self, site: _Site, cj: Job, now: float, events: list) -> None:
+        sj = self._cj2sj[cj.job_id]
+        sj.start = now
+        dur = self._service_seconds(sj, site.name)
+        sj.finish = now + dur
+        site.busy += 1
+        site.running_work += sj.work
+        heapq.heappush(events, (sj.finish, next(self._seq), "finish", (site.name, cj)))
+
+    def _dispatch(self, site_name: str, now: float, events: list) -> None:
+        site = self.sites[site_name]
+        while site.busy < site.nodes:
+            cj = site.pop(now)
+            if cj is None:
+                return
+            self._start(site, cj, now, events)
+
+    def _dispatch_central(self, now: float, events: list) -> None:
+        while self.central_fifo:
+            free = [s for s in self.sites.values() if s.busy < s.nodes]
+            if not free:
+                return
+            cj = self.central_fifo.pop(0)
+            site = free[0]
+            self._cj2sj[cj.job_id].exec_site = site.name
+            self._start(site, cj, now, events)
+
+    def _on_finish(self, site_name: str, cj: Job, now: float, events: list) -> None:
+        site = self.sites[site_name]
+        site.busy -= 1
+        site.running_work -= cj.compute_work
+        self._bucket(site_name, "executed", now)
+        if self.policy == "fcfs":
+            self._dispatch_central(now, events)
+        else:
+            self._dispatch(site_name, now, events)
+
+    def _on_migrate_check(self, now: float, events: list) -> None:
+        """§IX/§X: congested sites push Q4 jobs to cheaper peers."""
+        for name, site in self.sites.items():
+            if not site.use_mlfq:
+                continue
+            if not site.mlfq.congested(self.congestion_window_s, now):
+                continue
+            for cj in list(site.mlfq.low_priority_jobs()):
+                sj = self._cj2sj[cj.job_id]
+                peers = [
+                    PeerView(
+                        name=p,
+                        queue_length=self.sites[p].queue_len(),
+                        jobs_ahead=self.sites[p].mlfq.jobs_ahead(cj.priority),
+                        total_cost=self.placement_cost(sj, p),
+                    )
+                    for p in self.sites
+                    if p != name
+                ]
+                decision = select_peer(
+                    cj, name,
+                    site.mlfq.jobs_ahead(cj.priority),
+                    self.placement_cost(sj, name),
+                    peers,
+                )
+                if decision.migrate and decision.target:
+                    site.mlfq.remove(cj)
+                    apply_migration(cj, decision)
+                    sj.migrated = True
+                    sj.exec_site = decision.target
+                    self._bucket(name, "exported", now)
+                    self._bucket(decision.target, "imported", now)
+                    self.sites[decision.target].enqueue(cj, now)
+                    self._dispatch(decision.target, now, events)

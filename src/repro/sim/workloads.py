@@ -1,0 +1,122 @@
+"""Workload generators for the grid simulator.
+
+Includes the paper's test-grid shape (§XI: five sites — site 1 with
+four nodes, the rest with five) and a scaled CMS analysis workload from
+the §II estimates (jobs/day, dataset sizes, subjob fan-out).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SimJob", "paper_grid_spec", "bulk_burst", "poisson_stream", "cms_case_study"]
+
+
+@dataclass
+class SimJob:
+    user: str
+    arrival: float
+    work: float                      # pure execution seconds on one node
+    input_bytes: float = 0.0
+    output_bytes: float = 0.0
+    data_site: Optional[str] = None  # where the input dataset lives
+    origin_site: str = "site1"       # submission site (output returns here)
+    t: float = 1.0                   # processors (SJF / priority key)
+    group_id: Optional[str] = None
+    # -- runtime bookkeeping (filled by the simulator) --
+    exec_site: Optional[str] = None
+    queue_enter: float = field(default=0.0)
+    start: float = field(default=-1.0)
+    finish: float = field(default=-1.0)
+    migrated: bool = False
+
+    @property
+    def queue_time(self) -> float:
+        return max(0.0, self.start - self.queue_enter)
+
+    @property
+    def exec_time(self) -> float:
+        return max(0.0, self.finish - self.start)
+
+    @property
+    def turnaround(self) -> float:
+        return max(0.0, self.finish - self.arrival)
+
+
+def paper_grid_spec() -> dict[str, int]:
+    """§XI test grid: site1 has 4 nodes, site2..site5 have 5 each."""
+    return {"site1": 4, "site2": 5, "site3": 5, "site4": 5, "site5": 5}
+
+
+def bulk_burst(
+    user: str,
+    n: int,
+    at: float = 0.0,
+    work: float = 60.0,
+    input_bytes: float = 1e9,
+    output_bytes: float = 1e8,
+    data_site: str = "site1",
+    origin_site: str = "site1",
+    group_id: Optional[str] = None,
+    rng: Optional[np.random.Generator] = None,
+    work_jitter: float = 0.0,
+) -> list[SimJob]:
+    """One bulk submission: n similar jobs at the same instant (§VIII:
+    'the priority of the burst … is always the same since each batch of
+    jobs has the same execution requirements')."""
+    rng = rng or np.random.default_rng(0)
+    jobs = []
+    for i in range(n):
+        w = work * float(1.0 + (rng.uniform(-work_jitter, work_jitter) if work_jitter else 0.0))
+        jobs.append(
+            SimJob(
+                user=user, arrival=at, work=w,
+                input_bytes=input_bytes, output_bytes=output_bytes,
+                data_site=data_site, origin_site=origin_site,
+                group_id=group_id or f"{user}@{at:.0f}",
+            )
+        )
+    return jobs
+
+
+def poisson_stream(
+    user: str,
+    rate_per_s: float,
+    duration_s: float,
+    seed: int = 0,
+    **job_kw,
+) -> list[SimJob]:
+    rng = np.random.default_rng(seed)
+    jobs, t = [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_per_s))
+        if t > duration_s:
+            break
+        jobs.extend(bulk_burst(user, 1, at=t, rng=rng, **job_kw))
+    return jobs
+
+
+def cms_case_study(scale: float = 1.0, seed: int = 0) -> list[SimJob]:
+    """§II estimates, scaled: 100 users, 250 jobs/day expected tier;
+    dataset ~30 GB; runtime seconds→hours. ``scale`` shrinks the day."""
+    rng = np.random.default_rng(seed)
+    users = [f"phys{i:03d}" for i in range(max(2, int(100 * scale)))]
+    n_jobs = max(10, int(250 * scale))
+    day = 86_400.0 * scale
+    jobs = []
+    for _ in range(n_jobs):
+        user = users[int(rng.integers(len(users)))]
+        arrival = float(rng.uniform(0, day))
+        work = float(rng.lognormal(mean=4.0, sigma=1.5))      # ~55 s median
+        data_gb = float(rng.lognormal(mean=2.5, sigma=1.0))   # ~12 GB median
+        jobs.append(
+            SimJob(
+                user=user, arrival=arrival, work=work,
+                input_bytes=data_gb * 1e9, output_bytes=data_gb * 1e7,
+                data_site=f"site{int(rng.integers(1, 6))}",
+                origin_site=f"site{int(rng.integers(1, 6))}",
+            )
+        )
+    return sorted(jobs, key=lambda j: j.arrival)

@@ -1,0 +1,108 @@
+"""§IX job migration + §X congestion-driven migration."""
+import pytest
+
+from repro.core import (
+    Job,
+    MultilevelFeedbackQueues,
+    PeerView,
+    migrate_congested,
+    select_peer,
+)
+from repro.core.migration import apply_migration
+
+
+def _peers(**jobs_ahead):
+    return [
+        PeerView(name=k, queue_length=v, jobs_ahead=v, total_cost=float(v))
+        for k, v in jobs_ahead.items()
+    ]
+
+
+class TestSelectPeer:
+    def test_migrates_to_least_loaded(self):
+        job = Job(user="u", priority=-0.7)
+        d = select_peer(job, "local", local_jobs_ahead=10, local_cost=5.0,
+                        peers=_peers(a=7, b=2, c=9))
+        assert d.migrate and d.target == "b"
+
+    def test_stays_when_local_best(self):
+        job = Job(user="u", priority=-0.7)
+        d = select_peer(job, "local", local_jobs_ahead=1, local_cost=0.1,
+                        peers=_peers(a=7, b=2))
+        assert not d.migrate
+
+    def test_pinned_after_one_migration(self):
+        """§IX: no cycling — a migrated job never migrates again."""
+        job = Job(user="u", priority=-0.7)
+        d = select_peer(job, "local", 10, 5.0, _peers(b=1))
+        apply_migration(job, d)
+        assert job.migrated and job.site == "b"
+        d2 = select_peer(job, "b", 10, 5.0, _peers(c=0))
+        assert not d2.migrate
+        assert "pinned" in d2.reason
+
+    def test_priority_bumped_on_migration(self):
+        job = Job(user="u", priority=-0.7)
+        d = select_peer(job, "local", 10, 5.0, _peers(b=1))
+        apply_migration(job, d)
+        assert job.priority == pytest.approx(-0.6)
+
+    def test_dead_peers_ignored(self):
+        job = Job(user="u", priority=-0.7)
+        peers = [PeerView(name="dead", queue_length=0, jobs_ahead=0,
+                          total_cost=0.0, alive=False)]
+        d = select_peer(job, "local", 10, 5.0, peers)
+        assert not d.migrate
+
+
+class TestCongestionMigration:
+    def _congested_queue(self):
+        q = MultilevelFeedbackQueues(
+            quotas={"u": 10.0, "v": 1000.0}, congestion_thrs=0.5
+        )
+        # A high-quota user with two jobs, then a low-quota user floods
+        # the site: u's jobs cross N=(q·T)/(Q·t) and sink to Q4 (§X),
+        # no service → heavily congested.
+        for i in range(2):
+            q.submit(Job(user="v", t=1, submit_time=float(i)), now=float(i))
+        for i in range(2, 22):
+            q.submit(Job(user="u", t=1, submit_time=float(i)), now=float(i))
+        return q
+
+    def test_only_low_priority_jobs_move(self):
+        q = self._congested_queue()
+        q4 = set(id(j) for j in q.low_priority_jobs())
+        assert q4  # the flood created Q4 jobs
+        moved = migrate_congested(
+            q, "local",
+            poll_peers=lambda j: _peers(remote=0),
+            local_cost=lambda j: 100.0,
+            window=30.0, now=20.0,
+        )
+        assert moved
+        assert all(id(j) in q4 for j, _ in moved)
+        assert all(t == "remote" for _, t in moved)
+        assert all(j.migrated for j, _ in moved)
+
+    def test_no_migration_without_congestion(self):
+        q = MultilevelFeedbackQueues(quotas={"u": 10.0}, congestion_thrs=0.5)
+        for i in range(4):
+            q.submit(Job(user="u", t=1, submit_time=float(i)), now=float(i))
+            q.pop_next(now=float(i) + 0.5)  # service keeps pace
+        moved = migrate_congested(
+            q, "local",
+            poll_peers=lambda j: _peers(remote=0),
+            local_cost=lambda j: 100.0,
+            window=10.0, now=4.0,
+        )
+        assert moved == []
+
+    def test_max_moves_respected(self):
+        q = self._congested_queue()
+        moved = migrate_congested(
+            q, "local",
+            poll_peers=lambda j: _peers(remote=0),
+            local_cost=lambda j: 100.0,
+            window=30.0, now=20.0, max_moves=2,
+        )
+        assert len(moved) <= 2

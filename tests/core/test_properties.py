@@ -1,0 +1,123 @@
+"""Hypothesis property tests for system-level DIANA invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DianaScheduler, Job, JobClass, MultilevelFeedbackQueues, NetworkLink,
+    SiteState, allocate_proportional,
+)
+
+
+def _grid(rng, n_sites):
+    sites, links = {}, {}
+    for i in range(n_sites):
+        name = f"s{i}"
+        sites[name] = SiteState(
+            name=name, capacity=float(rng.integers(10, 2000)),
+            queue_length=float(rng.integers(0, 100)),
+            waiting_work=float(rng.uniform(0, 1000)),
+            load=float(rng.uniform(0, 1)),
+            alive=bool(rng.uniform() > 0.25),
+        )
+        links[name] = NetworkLink(
+            bandwidth_Bps=float(rng.uniform(1e8, 1e10)),
+            loss_rate=float(rng.uniform(0, 0.05)),
+            rtt_s=float(rng.uniform(0.001, 0.3)),
+        )
+    return sites, links
+
+
+class TestSchedulerProperties:
+    @given(seed=st.integers(0, 10_000), n=st.integers(2, 12),
+           cls=st.sampled_from(list(JobClass)))
+    @settings(max_examples=60, deadline=None)
+    def test_selected_site_is_min_cost_alive(self, seed, n, cls):
+        """§V: the chosen site is the cheapest *alive* site for the
+        job's class — never a dead one, never a costlier one."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, n)
+        if not any(s.alive for s in sites.values()):
+            next(iter(sites.values())).alive = True
+        d = DianaScheduler(sites, links)
+        job = Job(user="u", compute_work=float(rng.uniform(0.1, 100)),
+                  input_bytes=float(rng.uniform(0, 50e9)))
+        decision = d.select_site(job, cls)
+        assert sites[decision.site].alive
+        costs = dict(decision.ranking)
+        alive_costs = [c for s, c in costs.items() if sites[s].alive]
+        assert costs[decision.site] == pytest.approx(min(alive_costs))
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_load_feedback_is_monotone(self, seed):
+        """Adding queued work to a site never makes it cheaper."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 4)
+        for s in sites.values():
+            s.alive = True
+        d = DianaScheduler(sites, links)
+        job = Job(user="u", compute_work=10.0)
+        before = dict(d.rank_sites(job, JobClass.COMPUTE))
+        target = next(iter(sites))
+        sites[target].queue_length += 50
+        sites[target].waiting_work += 500
+        after = dict(d.rank_sites(job, JobClass.COMPUTE))
+        assert after[target] >= before[target]
+        for other in sites:
+            if other != target:
+                assert after[other] == pytest.approx(before[other])
+
+    @given(seed=st.integers(0, 10_000), n_jobs=st.integers(1, 30))
+    @settings(max_examples=40, deadline=None)
+    def test_every_job_placed_exactly_once(self, seed, n_jobs):
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 5)
+        for s in sites.values():
+            s.alive = True
+        d = DianaScheduler(sites, links)
+        q0 = sum(s.queue_length for s in sites.values())
+        jobs = [Job(user=f"u{i % 3}", compute_work=float(rng.uniform(1, 50)))
+                for i in range(n_jobs)]
+        for j in jobs:
+            d.place(j)
+        assert all(j.site in sites for j in jobs)
+        assert sum(s.queue_length for s in sites.values()) == q0 + n_jobs
+
+
+class TestQueueConservation:
+    @given(
+        arrivals=st.lists(
+            st.tuples(st.sampled_from(["a", "b"]), st.integers(1, 8)),
+            min_size=1, max_size=30),
+        pops=st.integers(0, 30),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_no_job_lost_or_duplicated(self, arrivals, pops):
+        q = MultilevelFeedbackQueues(quotas={"a": 100.0, "b": 300.0})
+        submitted = []
+        for i, (u, t) in enumerate(arrivals):
+            submitted.append(q.submit(Job(user=u, t=float(t), submit_time=float(i))))
+        seen = []
+        for _ in range(pops):
+            j = q.pop_next()
+            if j is None:
+                break
+            seen.append(j.job_id)
+        assert len(seen) == len(set(seen))
+        assert len(seen) + len(q) == len(submitted)
+
+
+class TestAllocationProperties:
+    @given(seed=st.integers(0, 10_000), jobs=st.integers(1, 100_000),
+           k=st.integers(1, 6))
+    @settings(max_examples=60, deadline=None)
+    def test_bigger_site_never_gets_fewer_jobs(self, seed, jobs, k):
+        rng = np.random.default_rng(seed)
+        caps = {f"s{i}": float(rng.integers(1, 1000)) for i in range(5)}
+        alloc = allocate_proportional(jobs, k, caps)
+        got = sorted(alloc.items(), key=lambda kv: caps[kv[0]])
+        for (s1, n1), (s2, n2) in zip(got, got[1:]):
+            if caps[s2] > caps[s1]:
+                assert n2 >= n1 - 1  # largest-remainder rounding slack

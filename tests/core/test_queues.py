@@ -1,0 +1,153 @@
+"""§VI/§VII/§X multilevel feedback queues."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Job, MultilevelFeedbackQueues, is_congested
+from repro.core import priority as prio
+
+
+def test_fig6_walkthrough_via_queues():
+    """Drive the Fig 6 scenario through the queue manager itself."""
+    q = MultilevelFeedbackQueues(quotas={"A": 1900.0, "B": 1700.0})
+    j1 = q.submit(Job(user="A", t=1, submit_time=0.0))
+    assert j1.priority == pytest.approx(0.0)
+    assert j1.queue == 1  # Q2
+
+    j2 = q.submit(Job(user="A", t=5, submit_time=1.0))
+    assert j2.priority == pytest.approx(-0.4)
+    assert j2.queue == 2  # Q3
+    # Reprioritization moved j1 Q2 → Q1.
+    assert j1.priority == pytest.approx(0.666666, abs=1e-5)
+    assert j1.queue == 0
+
+    j3 = q.submit(Job(user="B", t=1, submit_time=2.0))
+    assert j3.priority == pytest.approx(0.6974, abs=1e-4)
+    assert j3.queue == 0
+    assert j1.priority == pytest.approx(0.4586, abs=1e-4)
+    assert j1.queue == 1  # Q1 → Q2
+    assert j2.priority == pytest.approx(-0.6305, abs=1e-4)
+    assert j2.queue == 3  # Q3 → Q4
+
+    # Dispatch order: B's job (0.6974), then A j1, then A j2.
+    assert q.pop_next() is j3
+    assert q.pop_next() is j1
+    assert q.pop_next() is j2
+    assert q.pop_next() is None
+
+
+def test_fcfs_within_equal_priority():
+    q = MultilevelFeedbackQueues(quotas={"A": 100.0, "B": 100.0})
+    a = q.submit(Job(user="A", t=2, submit_time=0.0))
+    b = q.submit(Job(user="B", t=2, submit_time=5.0))
+    assert a.priority == pytest.approx(b.priority)
+    assert q.pop_next() is a  # older job first (§X timestamp rule)
+
+
+def test_sjf_batch_arrangement():
+    """§VII: fewer processors ⇒ placed (and thus popped) earlier."""
+    q = MultilevelFeedbackQueues(quotas={"A": 100.0})
+    jobs = [Job(user="A", t=t, submit_time=0.0) for t in (8, 1, 4, 2)]
+    q.submit_batch(jobs)
+    popped = [q.pop_next().t for _ in range(4)]
+    assert popped == sorted(popped)  # 1, 2, 4, 8
+
+
+def test_service_does_not_reprioritize():
+    q = MultilevelFeedbackQueues(quotas={"A": 100.0, "B": 50.0})
+    q.submit(Job(user="A", t=1))
+    q.submit(Job(user="B", t=1))
+    before = [(j.job_id, j.priority) for j in q.jobs]
+    q.pop_next()
+    after = {j.job_id: j.priority for j in q.jobs}
+    for jid, p in before:
+        if jid in after:
+            assert after[jid] == p
+
+
+def test_congestion_formula():
+    # (arrival − service)/arrival > Thrs
+    assert is_congested(10.0, 2.0, thrs=0.5)          # 0.8 > 0.5
+    assert not is_congested(10.0, 8.0, thrs=0.5)      # 0.2 < 0.5
+    assert not is_congested(0.0, 5.0, thrs=0.5)
+
+
+def test_jobs_ahead():
+    q = MultilevelFeedbackQueues(quotas={"A": 1900.0, "B": 1700.0})
+    q.submit(Job(user="A", t=1))
+    q.submit(Job(user="A", t=5))
+    q.submit(Job(user="B", t=1))
+    low = min(q.jobs, key=lambda j: j.priority)
+    assert q.jobs_ahead(low.priority) == 3  # everyone incl. itself
+    high = max(q.jobs, key=lambda j: j.priority)
+    assert q.jobs_ahead(high.priority) == 1
+
+
+class TestQueueProperties:
+    @given(
+        arrivals=st.lists(
+            st.tuples(
+                st.sampled_from(["u1", "u2", "u3"]),
+                st.integers(1, 16),
+            ),
+            min_size=1,
+            max_size=40,
+        )
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_invariants_after_every_arrival(self, arrivals):
+        q = MultilevelFeedbackQueues(quotas={"u1": 100.0, "u2": 200.0, "u3": 300.0})
+        for i, (user, t) in enumerate(arrivals):
+            q.submit(Job(user=user, t=float(t), submit_time=float(i)))
+            # (1) priorities in (−1, 1); (2) band matches priority.
+            for j in q.jobs:
+                assert -1.0 < j.priority < 1.0
+                assert j.queue == prio.queue_index(j.priority)
+        # (3) pop drains in non-increasing priority order at pop time
+        # (priorities frozen during service — §X).
+        order = []
+        while True:
+            j = q.pop_next()
+            if j is None:
+                break
+            order.append(j.priority)
+        assert order == sorted(order, reverse=True) or len(order) <= 1 or all(
+            a >= b - 1e-6 for a, b in zip(order, order[1:])
+        )
+
+    @given(
+        rate=st.floats(0.1, 100.0),
+        wait=st.floats(0.0, 50.0),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_littles_law(self, rate, wait):
+        n = prio.littles_law_queue_length(rate, wait)
+        assert n == pytest.approx(rate * wait)
+
+
+def test_littles_law_steady_state_simulation():
+    """Empirical check of N = R·W on an M/D/1 run through the queues."""
+    rng = np.random.default_rng(0)
+    q = MultilevelFeedbackQueues(quotas={"u": 100.0})
+    service_time = 1.0
+    arrival_rate = 0.5  # utilization 0.5
+    t, next_free = 0.0, 0.0
+    waits, lengths = [], []
+    for _ in range(5000):
+        t += float(rng.exponential(1.0 / arrival_rate))
+        # Serve every job whose service can start before this arrival.
+        while len(q):
+            head_arrival = min(j.submit_time for j in q.jobs)
+            start = max(next_free, head_arrival)
+            if start >= t:
+                break
+            j = q.pop_next(now=start)
+            waits.append(start - j.submit_time)
+            next_free = start + service_time
+        q.submit(Job(user="u", t=1, submit_time=t), now=t)
+        lengths.append(len(q) - 1)  # queue length seen by the arrival (PASTA)
+    measured_N = float(np.mean(lengths))
+    measured_W = float(np.mean(waits))
+    # Little: N = R·W — generous tolerance for finite-run noise.
+    assert measured_N == pytest.approx(arrival_rate * measured_W, rel=0.25, abs=0.2)

@@ -1,0 +1,166 @@
+"""§IV costs + §V site selection."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CostWeights,
+    DianaScheduler,
+    Job,
+    JobClass,
+    JobDemand,
+    NetworkLink,
+    SiteState,
+    classify,
+    computation_cost,
+    data_transfer_cost,
+    mathis_throughput,
+    network_cost,
+    total_cost,
+    total_cost_matrix,
+)
+
+
+class TestCosts:
+    def test_network_cost_zero_when_lossless(self):
+        assert network_cost(NetworkLink(bandwidth_Bps=1e9, loss_rate=0.0)) == 0.0
+
+    def test_network_cost_increases_with_loss(self):
+        costs = [
+            network_cost(NetworkLink(bandwidth_Bps=1e9, loss_rate=l))
+            for l in (0.001, 0.01, 0.1)
+        ]
+        assert costs == sorted(costs)
+
+    def test_mathis_caps_lossy_link(self):
+        lossy = NetworkLink(bandwidth_Bps=1e9, loss_rate=0.01, rtt_s=0.1)
+        # MSS/(RTT·√loss) = 1460/(0.1·0.1) = 146 kB/s ≪ 1 GB/s
+        assert mathis_throughput(lossy) == pytest.approx(1460 / (0.1 * 0.1))
+        assert lossy.effective_bandwidth() == pytest.approx(1.46e5, rel=1e-3)
+
+    def test_computation_cost_formula(self):
+        site = SiteState(name="s", capacity=100.0, queue_length=50.0,
+                         waiting_work=200.0, load=0.5)
+        w = CostWeights(w_queue=2.0, w_work=3.0, w_load=4.0)
+        expected = 2.0 * 50 / 100 + 3.0 * 200 / 100 + 4.0 * 0.5
+        assert computation_cost(site, w) == pytest.approx(expected)
+
+    def test_data_transfer_cost_sums_three_terms(self):
+        demand = JobDemand(input_bytes=3e9, output_bytes=1e9, executable_bytes=1e6)
+        link = NetworkLink(bandwidth_Bps=1e9)
+        assert data_transfer_cost(demand, link) == pytest.approx(4.001)
+
+    def test_total_is_sum(self):
+        demand = JobDemand(compute_work=10.0, input_bytes=1e9)
+        site = SiteState(name="s", capacity=100.0, queue_length=10)
+        link = NetworkLink(bandwidth_Bps=1e9, loss_rate=0.01)
+        assert total_cost(demand, site, link) == pytest.approx(
+            network_cost(link) + computation_cost(site) + data_transfer_cost(demand, link)
+        )
+
+
+class TestCostMatrix:
+    @given(
+        J=st.integers(1, 16),
+        S=st.integers(1, 8),
+        seed=st.integers(0, 9999),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_matrix_matches_scalar(self, J, S, seed):
+        rng = np.random.default_rng(seed)
+        jb = rng.uniform(0, 1e10, J)
+        jw = rng.uniform(1, 100, J)
+        cap = rng.uniform(10, 1000, S)
+        qi = rng.uniform(0, 50, S)
+        qw = rng.uniform(0, 500, S)
+        load = rng.uniform(0, 1, S)
+        bw = rng.uniform(1e8, 1e10, S)
+        loss = rng.uniform(0, 0.05, S)
+        alive = rng.uniform(0, 1, S) > 0.2
+        M = np.asarray(total_cost_matrix(jb, jw, cap, qi, qw, load, bw, loss, alive))
+        assert M.shape == (J, S)
+        for j in range(J):
+            for s in range(S):
+                if not alive[s]:
+                    assert np.isinf(M[j, s])
+                    continue
+                site = SiteState(name="x", capacity=cap[s], queue_length=qi[s],
+                                 waiting_work=qw[s], load=load[s])
+                link = NetworkLink(bandwidth_Bps=bw[s], loss_rate=loss[s])
+                demand = JobDemand(compute_work=jw[j], input_bytes=jb[j])
+                expect = (network_cost(link) + computation_cost(site)
+                          + jw[j] / cap[s] + data_transfer_cost(demand, link))
+                assert M[j, s] == pytest.approx(expect, rel=2e-4, abs=1e-4)
+
+
+def _grid(loads=None):
+    loads = loads or {}
+    sites = {
+        "cern": SiteState(name="cern", capacity=1000.0, queue_length=loads.get("cern", 0)),
+        "fnal": SiteState(name="fnal", capacity=500.0, queue_length=loads.get("fnal", 0)),
+        "ral": SiteState(name="ral", capacity=200.0, queue_length=loads.get("ral", 0)),
+    }
+    links = {
+        "cern": NetworkLink(bandwidth_Bps=10e9, loss_rate=0.0),
+        "fnal": NetworkLink(bandwidth_Bps=1e9, loss_rate=0.01),
+        "ral": NetworkLink(bandwidth_Bps=0.5e9, loss_rate=0.02),
+    }
+    return DianaScheduler(sites, links)
+
+
+class TestSelection:
+    def test_classify(self):
+        assert classify(Job(user="u", compute_work=50.0)) is JobClass.COMPUTE
+        assert classify(Job(user="u", compute_work=0.1, input_bytes=30e9)) is JobClass.DATA
+        assert classify(Job(user="u", compute_work=50.0, input_bytes=30e9)) is JobClass.BOTH
+
+    def test_compute_job_prefers_capacity(self):
+        d = _grid()
+        decision = d.select_site(Job(user="u", compute_work=100.0))
+        assert decision.site == "cern"
+        assert decision.job_class is JobClass.COMPUTE
+
+    def test_data_job_prefers_bandwidth(self):
+        d = _grid(loads={"cern": 0})
+        job = Job(user="u", compute_work=0.1, input_bytes=30e9)
+        decision = d.select_site(job)
+        assert decision.site == "cern"  # 10 GB/s lossless link
+
+    def test_dead_site_skipped(self):
+        d = _grid()
+        d.sites["cern"].alive = False
+        decision = d.select_site(Job(user="u", compute_work=100.0))
+        assert decision.site == "fnal"
+
+    def test_ranking_ascending(self):
+        d = _grid()
+        ranking = d.rank_sites(Job(user="u", compute_work=100.0, input_bytes=30e9),
+                               JobClass.BOTH)
+        costs = [c for _, c in ranking]
+        assert costs == sorted(costs)
+
+    def test_place_updates_state_and_next_decision(self):
+        """'After every job we calculate the cost to submit the next
+        job' — load feedback must eventually divert placements."""
+        d = _grid()
+        placed = [d.place(Job(user="u", compute_work=500.0)).site for _ in range(20)]
+        assert "cern" in placed
+        assert len(set(placed)) >= 2  # queue growth diverted some jobs
+
+    def test_complete_releases(self):
+        d = _grid()
+        job = Job(user="u", compute_work=10.0)
+        d.place(job)
+        site = d.sites[job.site]
+        q0, w0 = site.queue_length, site.waiting_work
+        d.complete(job)
+        assert site.queue_length == q0 - 1
+        assert site.waiting_work == pytest.approx(w0 - 10.0)
+
+    def test_no_alive_site_raises(self):
+        d = _grid()
+        for s in d.sites.values():
+            s.alive = False
+        with pytest.raises(RuntimeError):
+            d.select_site(Job(user="u"))

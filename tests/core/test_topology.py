@@ -1,0 +1,64 @@
+"""§IX P2P topology: RootGrid/SubGrid, standby failover, join/leave."""
+from repro.core import GridTopology, Node
+
+
+def test_first_peer_creates_rootgrid():
+    topo = GridTopology()
+    root = topo.join("cern", Node(name="n0", availability=0.9))
+    assert root.master.name == "n0"
+    assert "cern" in topo.rootgrids
+
+
+def test_join_existing_rootgrid():
+    topo = GridTopology()
+    topo.join("cern", Node(name="n0", availability=0.9))
+    root = topo.join("cern", Node(name="n1", availability=0.99))
+    assert set(root.node_table) == {"n0", "n1"}
+
+
+def test_standby_is_highest_availability():
+    topo = GridTopology()
+    root = topo.join("cern", Node(name="n0", availability=0.5))
+    topo.join("cern", Node(name="n1", availability=0.99))
+    topo.join("cern", Node(name="n2", availability=0.7))
+    assert root.standby.name == "n1"
+
+
+def test_master_failover_promotes_standby_with_table():
+    topo = GridTopology()
+    root = topo.join("cern", Node(name="n0", availability=0.5))
+    topo.join("cern", Node(name="n1", availability=0.99))
+    topo.join("cern", Node(name="n2", availability=0.7))
+    assert topo.fail_site_master("cern")
+    assert root.master.name == "n1"           # standby took over
+    assert root.standby.name == "n2"          # new standby elected
+    assert set(root.node_table) >= {"n1", "n2"}
+
+
+def test_failover_without_standby_fails():
+    topo = GridTopology()
+    topo.join("lonely", Node(name="solo"))
+    assert not topo.fail_site_master("lonely")
+
+
+def test_peers_excludes_self():
+    topo = GridTopology()
+    for site in ("cern", "fnal", "ral"):
+        topo.join(site, Node(name=f"{site}-n0"))
+    assert set(topo.peers("cern")) == {"fnal", "ral"}
+
+
+def test_small_site_joins_nearest_subgrid():
+    topo = GridTopology()
+    topo.join("cern", Node(name="n0"))
+    root = topo.join("tiny", Node(name="t0"), nearest="cern")
+    assert root.site == "cern"
+    assert "t0" in root.node_table
+
+
+def test_leave_updates_table():
+    topo = GridTopology()
+    topo.join("cern", Node(name="n0"))
+    topo.join("cern", Node(name="n1"))
+    topo.leave("cern", "n1")
+    assert "n1" not in topo.rootgrids["cern"].node_table

@@ -1,0 +1,68 @@
+"""End-to-end training-loop integration: loss ↓, checkpoint/restart."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticLMDataset
+from repro.models import LM, ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.checkpoint import CheckpointManager
+
+CFG = ModelConfig(name="ci-tiny", num_layers=2, d_model=128, num_heads=4,
+                  num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
+                  param_dtype="float32", compute_dtype="float32", remat=False,
+                  max_seq_len=128)
+
+
+def _train(steps, params=None, opt=None, start=0, ckpt=None, ckpt_every=0):
+    lm = LM(CFG)
+    if params is None:
+        params = lm.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+    ds = SyntheticLMDataset(CFG.vocab_size, 64, seed=3)
+    acfg = AdamWConfig(weight_decay=0.0)
+
+    @jax.jit
+    def step_fn(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: lm.loss(p, batch), has_aux=True)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(grads, opt, params, 1e-3, acfg)
+        return params, opt, loss
+
+    losses = []
+    for s in range(start, steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(s, 4).items()}
+        params, opt, loss = step_fn(params, opt, batch)
+        losses.append(float(loss))
+        if ckpt and ckpt_every and s and s % ckpt_every == 0:
+            ckpt.save_async(s, (params, opt))
+    if ckpt:
+        ckpt.wait()
+    return params, opt, losses
+
+
+def test_loss_decreases():
+    _, _, losses = _train(25)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_checkpoint_restart_continues_identically(tmp_path):
+    """Crash at step 12, restore, continue — must match the unbroken
+    run bit-for-bit (deterministic data + state round-trip)."""
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    p_full, o_full, losses_full = _train(16, ckpt=ckpt, ckpt_every=6)
+
+    # fresh process-equivalent: restore from step 12 and continue
+    lm = LM(CFG)
+    p0 = lm.init(jax.random.PRNGKey(0))
+    o0 = adamw_init(p0)
+    (p_r, o_r), step = ckpt.restore((p0, o0))
+    assert step == 12
+    _, _, losses_resumed = _train(16, params=p_r, opt=o_r, start=step + 1)
+    np.testing.assert_allclose(losses_resumed, losses_full[step + 1:],
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,162 @@
+"""Sharding-spec derivation + HLO static analyzer unit tests."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.runtime import sharding as shlib
+from repro.runtime.pspec import logical_axis_rules, shard, spec_for
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+class TestParamSpecs:
+    def test_attention_weights_megatron(self):
+        mesh = _mesh()
+        params = {
+            "blocks": {
+                "attn": {
+                    "wq": jax.ShapeDtypeStruct((4, 64, 8, 32), jnp.bfloat16),
+                    "wo": jax.ShapeDtypeStruct((4, 8, 32, 64), jnp.bfloat16),
+                },
+                "mlp": {
+                    "w_gate": jax.ShapeDtypeStruct((4, 64, 256), jnp.bfloat16),
+                    "w_down": jax.ShapeDtypeStruct((4, 256, 64), jnp.bfloat16),
+                },
+            },
+            "embed": jax.ShapeDtypeStruct((512, 64), jnp.bfloat16),
+            "final_norm": jax.ShapeDtypeStruct((64,), jnp.float32),
+        }
+        specs = shlib.param_specs(mesh, params, zero3=True)
+        b = specs["blocks"]
+        assert b["attn"]["wq"] == P(None, "data", "model", None)
+        assert b["attn"]["wo"] == P(None, "model", None, "data")
+        assert b["mlp"]["w_gate"] == P(None, "data", "model")
+        assert b["mlp"]["w_down"] == P(None, "model", "data")
+        assert specs["embed"] == P("model", "data")
+        assert specs["final_norm"] == P(None)
+
+    def test_no_zero3_replicates_input_dims(self):
+        mesh = _mesh()
+        params = {"blocks": {"mlp": {"w_gate": jax.ShapeDtypeStruct((4, 64, 256), jnp.bfloat16)}}}
+        specs = shlib.param_specs(mesh, params, zero3=False)
+        assert specs["blocks"]["mlp"]["w_gate"] == P(None, None, "model")
+
+    def test_indivisible_dims_replicate(self):
+        mesh = _mesh((2, 16), ("data", "model"))
+        params = {"blocks": {"attn": {"wq": jax.ShapeDtypeStruct((4, 64, 10, 32), jnp.bfloat16)}}}
+        specs = shlib.param_specs(mesh, params, zero3=True)
+        # 10 heads % 16 → replicated, d=64 % 2 → data
+        assert specs["blocks"]["attn"]["wq"] == P(None, "data", None, None)
+
+    def test_moe_expert_parallel_2d(self):
+        """E divides model×data ⇒ 2-D EP (fully-resident expert weights)."""
+        mesh = _mesh()
+        params = {"moe_blocks": {"moe": {
+            "w_gate": jax.ShapeDtypeStruct((8, 16, 64, 128), jnp.bfloat16)}}}
+        specs = shlib.param_specs(mesh, params, zero3=True)
+        assert specs["moe_blocks"]["moe"]["w_gate"] == P(None, ("model", "data"), None, None)
+
+    def test_moe_expert_parallel_1d_fallback(self):
+        """E % (model·data) ≠ 0 ⇒ 1-D EP over 'model' + ZeRO'd d."""
+        mesh = _mesh((2, 3), ("data", "model"))
+        params = {"moe_blocks": {"moe": {
+            "w_gate": jax.ShapeDtypeStruct((8, 9, 64, 128), jnp.bfloat16)}}}
+        specs = shlib.param_specs(mesh, params, zero3=True)
+        assert specs["moe_blocks"]["moe"]["w_gate"] == P(None, "model", "data", None)
+
+
+class TestCacheBatchSpecs:
+    def test_cache_seq_over_model_batch_over_data(self):
+        mesh = _mesh()
+        cache = {"k": jax.ShapeDtypeStruct((8, 16, 1024, 8, 32), jnp.bfloat16)}
+        specs = shlib.cache_specs(mesh, cache, batch_size=16)
+        assert specs["k"] == P(None, "data", "model", None, None)
+
+    def test_batch_one_replicates(self):
+        mesh = _mesh()
+        cache = {"k": jax.ShapeDtypeStruct((8, 1, 1024, 8, 32), jnp.bfloat16)}
+        specs = shlib.cache_specs(mesh, cache, batch_size=1)
+        assert specs["k"] == P(None, None, "model", None, None)
+
+    def test_batch_specs_pod_data(self):
+        mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 128), jnp.int32)}
+        specs = shlib.batch_specs(mesh, batch)
+        assert specs["tokens"] == P(("pod", "data"), None)
+
+
+class TestPspec:
+    def test_noop_without_context(self):
+        x = jnp.ones((4, 4))
+        assert shard(x, "batch", None) is x
+
+    def test_spec_resolution_divisibility(self):
+        mesh = _mesh((2, 2), ("data", "model"))
+        with logical_axis_rules(mesh):
+            spec = spec_for(mesh, (4, 10, 8), ("batch", "heads", "ff"))
+        # heads=10 % 2 == 0 → sharded; all divisible here
+        assert spec == P("data", "model", None) or spec == P("data", None, "model")
+
+
+SAMPLE_HLO = """
+HloModule jit_f, entry_computation_layout={()->f32[]}
+
+%cond (p: (s32[], f32[2,2])) -> pred[] {
+  %p = (s32[], f32[2,2]{1,0}) parameter(0)
+  %c5 = s32[] constant(5)
+  %gte = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%gte, %c5), direction=LT
+}
+
+%body (p2: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+  %p2 = (s32[], f32[2,2]{1,0}) parameter(0)
+  %one = s32[] constant(1)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %x = f32[2,2]{1,0} get-tuple-element(%p2), index=1
+  %ni = s32[] add(%i, %one)
+  %y = f32[2,2]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[2,2]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%cond
+  ROOT %t = (s32[], f32[2,2]{1,0}) tuple(%ni, %ar)
+}
+
+ENTRY %main () -> f32[] {
+  %z = s32[] constant(0)
+  %x0 = f32[2,2]{1,0} constant({{1,2},{3,4}})
+  %init = (s32[], f32[2,2]{1,0}) tuple(%z, %x0)
+  %w = (s32[], f32[2,2]{1,0}) while(%init), condition=%cond, body=%body
+  %xf = f32[2,2]{1,0} get-tuple-element(%w), index=1
+  ROOT %s = f32[] reduce(%xf, %z), dimensions={0,1}, to_apply=%cond
+}
+"""
+
+
+class TestHloAnalyzer:
+    def test_while_trip_count_multiplies(self):
+        c = analyze_hlo(SAMPLE_HLO)
+        # dot: 2·4·2 = 16 flops × 5 trips = 80
+        assert c.flops == pytest.approx(80.0)
+        # all-reduce: 16 bytes × 2(g−1)/g, g=4 → 24 bytes × 5 trips = 120
+        assert c.collective_bytes == pytest.approx(120.0)
+        assert c.by_coll["all-reduce"]["count"] == 5
+
+    def test_real_compiled_module(self):
+        def f(w, x):
+            def body(h, w_):
+                return jnp.tanh(h @ w_), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h.sum()
+
+        lowered = jax.jit(jax.grad(f)).lower(
+            jax.ShapeDtypeStruct((3, 16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((4, 16), jnp.float32))
+        c = analyze_hlo(lowered.compile().as_text())
+        # fwd: 3 × 2·4·16·16 = 6144; bwd ≈ 2× more dots
+        assert c.flops >= 6144
+        assert c.flops <= 6144 * 4
