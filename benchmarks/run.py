@@ -8,15 +8,15 @@ import traceback
 
 
 def main() -> None:
-    from . import (cms_case_study, fig4_group_split, fig6_priority,
-                   fig7_8_queue_exec, fig9_11_migration, kernels_bench,
-                   roofline, serving_bench)
+    from . import (bulk_placement_bench, cms_case_study, fig4_group_split,
+                   fig6_priority, fig7_8_queue_exec, fig9_11_migration,
+                   kernels_bench, roofline, serving_bench)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig4_group_split, fig6_priority, fig7_8_queue_exec,
-                fig9_11_migration, cms_case_study, roofline, kernels_bench,
-                serving_bench):
+                fig9_11_migration, cms_case_study, bulk_placement_bench,
+                roofline, kernels_bench, serving_bench):
         try:
             mod.run()
         except Exception:  # noqa: BLE001 — report all benches

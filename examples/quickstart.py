@@ -61,3 +61,23 @@ placement = bulk.schedule_group(group)
 print(f"\nbulk group 'higgs-scan' split={placement.split} → "
       + ", ".join(f"{s}:{len(js)}" for s, js in placement.assignments.items()))
 print("output aggregation plan:", bulk.aggregate_outputs(placement))
+
+# --- 5. batched placement: the bulk-scale fast path ----------------------
+# One (jobs × sites) §IV matrix pass + vectorized replay of the queue
+# feedback — bit-identical to calling diana.place() per job, but one
+# array program instead of an O(J·S) Python loop (see
+# benchmarks/bulk_placement_bench.py: ~25x at 10k jobs × 256 sites).
+burst = [Job(user="bart", compute_work=float(w), input_bytes=5e9)
+         for w in np.linspace(1, 50, 1000)]
+batch = diana.place_batch(burst)
+spread = {s: batch.sites.count(s) for s in sites}
+print(f"\n1000-job burst placed in one batched pass → {spread}")
+print(f"   classes: {sorted({c.value for c in batch.classes})}, "
+      f"cost range {batch.costs.min():.2f}–{batch.costs.max():.2f}s")
+
+# Groups batch the same way: one matrix pass for all §VIII selections.
+sweeps = [BulkGroup(user=f"grad{i}", group_id=f"sweep-{i}", division_factor=2,
+                    jobs=[Job(user=f"grad{i}", t=1) for _ in range(200)])
+          for i in range(4)]
+for g, p in zip(sweeps, BulkScheduler(diana).schedule_groups(sweeps)):
+    print(f"   {g.group_id}: split={p.split} sites={p.sites}")

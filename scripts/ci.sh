@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Fast CI tier: everything except the multi-minute dryrun/model-compile
+# tests (marked `slow`). Target: < 60 s on a laptop-class CPU.
+#
+#   scripts/ci.sh               # fast tier
+#   scripts/ci.sh -k batch      # extra pytest args pass through
+#   RUN_SLOW=1 scripts/ci.sh    # full suite, slow tests included
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${RUN_SLOW:-0}" == "1" ]]; then
+    exec python -m pytest -q "$@"
+fi
+exec python -m pytest -q -m "not slow" "$@"

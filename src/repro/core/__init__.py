@@ -32,6 +32,15 @@ from .bulk import (
 )
 from .migration import MigrationDecision, PeerView, migrate_congested, select_peer
 from .topology import GridTopology, Node, RootGrid, SubGrid
+from .batch import (
+    BatchPlacement,
+    JobPack,
+    SitePack,
+    batched_argmin,
+    batched_cost_matrix,
+    cost_components,
+    replay_place,
+)
 
 __all__ = [
     "CostWeights", "JobDemand", "NetworkLink", "SiteState",
@@ -45,4 +54,6 @@ __all__ = [
     "allocate_proportional", "average_makespan",
     "MigrationDecision", "PeerView", "migrate_congested", "select_peer",
     "GridTopology", "Node", "RootGrid", "SubGrid",
+    "BatchPlacement", "JobPack", "SitePack", "batched_argmin",
+    "batched_cost_matrix", "cost_components", "replay_place",
 ]

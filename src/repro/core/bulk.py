@@ -141,13 +141,46 @@ class BulkScheduler:
         """The §VIII algorithm."""
         whole = self._group_as_job(group, group.jobs)
         decision = self.diana.select_site(whole)
+        return self._place_group(group, decision.site)
 
-        single_site_ok = self._fits(decision.site, group.jobs)
+    def schedule_groups(self, groups: Sequence[BulkGroup]) -> list[GroupPlacement]:
+        """Batched §VIII: one (groups × sites) §IV matrix pass.
+
+        The static network/data-transfer planes are evaluated once for
+        every group-as-job; between groups only the computation term is
+        re-derived from the live site state (which the per-group commits
+        mutate), so results are identical to calling
+        ``schedule_group`` on each group in order.
+        """
+        from . import batch as _batch
+
+        if not groups:
+            return []
+        wholes = [self._group_as_job(g, g.jobs) for g in groups]
+        sp = _batch.SitePack.from_scheduler(self.diana.sites, self.diana.links)
+        jp = _batch.JobPack.from_jobs(wholes)
+        net, _, dtc = _batch.cost_components(jp, sp, self.diana.weights)
+        w = self.diana.weights
+        placements = []
+        for g, group in enumerate(groups):
+            sp.refresh_dynamic(self.diana.sites)
+            cls = jp.classes[g]
+            comp = None
+            if cls is not JobClass.DATA:
+                comp = _batch.comp_site_column(sp, w) + jp.work[g] / sp.cap
+            row = np.where(sp.alive, _batch.class_total(cls, net, comp, dtc[g]), np.inf)
+            s, _ = _batch.argmin_finite(row)
+            placements.append(self._place_group(group, sp.names[s]))
+        return placements
+
+    def _place_group(self, group: BulkGroup, best_site: str) -> GroupPlacement:
+        """§VIII placement given the §V whole-group selection."""
+        single_site_ok = self._fits(best_site, group.jobs)
         if single_site_ok and group.division_factor == 1:
-            self._commit(decision.site, group.jobs)
+            self._commit(best_site, group.jobs)
             return GroupPlacement(
                 group_id=group.group_id,
-                assignments={decision.site: list(group.jobs)},
+                assignments={best_site: list(group.jobs)},
                 output_location=group.output_location,
                 split=False,
             )
@@ -159,16 +192,16 @@ class BulkScheduler:
         }
         alloc = allocate_proportional(group.size, group.division_factor, caps)
         if single_site_ok:
-            single_span = group.total_work / self.diana.sites[decision.site].capacity
+            single_span = group.total_work / self.diana.sites[best_site].capacity
             jobs_per = group.total_work / max(group.size, 1)
             split_span = average_makespan(
                 alloc, caps, hours_per_job=jobs_per
             )
             if single_span <= split_span:
-                self._commit(decision.site, group.jobs)
+                self._commit(best_site, group.jobs)
                 return GroupPlacement(
                     group_id=group.group_id,
-                    assignments={decision.site: list(group.jobs)},
+                    assignments={best_site: list(group.jobs)},
                     output_location=group.output_location,
                     split=False,
                 )

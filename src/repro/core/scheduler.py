@@ -15,7 +15,10 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
+
+if TYPE_CHECKING:
+    from .batch import BatchPlacement
 
 import numpy as np
 
@@ -129,6 +132,58 @@ class DianaScheduler:
         site.waiting_work += job.compute_work
         job.site = decision.site
         return decision
+
+    # -- batched fast paths (repro.core.batch) --------------------------------
+    def rank_sites_batch(
+        self,
+        jobs: Sequence[Job],
+        job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+    ) -> list[list[tuple[str, float]]]:
+        """Vectorized ``rank_sites`` over a batch: one (J, S) §IV matrix
+        pass instead of J Python loops. Rankings (order and costs) are
+        bit-identical to the per-job path; like ``rank_sites``, dead
+        sites stay in the ranking (selection skips them)."""
+        from . import batch as _batch
+
+        sp = _batch.SitePack.from_scheduler(self.sites, self.links)
+        jp = _batch.JobPack.from_jobs(jobs, job_classes)
+        cost = _batch.batched_cost_matrix(jp, sp, self.weights, mask_dead=False)
+        order = np.argsort(cost, axis=1, kind="stable")
+        return [
+            [(sp.names[s], float(cost[j, s])) for s in order[j]]
+            for j in range(len(jobs))
+        ]
+
+    def select_sites_batch(
+        self,
+        jobs: Sequence[Job],
+        job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+    ) -> "BatchPlacement":
+        """Batched ``select_site`` (no state commit — every job sees the
+        same snapshot, exactly like J independent ``select_site`` calls)."""
+        from . import batch as _batch
+
+        sp = _batch.SitePack.from_scheduler(self.sites, self.links)
+        jp = _batch.JobPack.from_jobs(jobs, job_classes)
+        cost = _batch.batched_cost_matrix(jp, sp, self.weights, mask_dead=True)
+        placement = _batch.batched_argmin(cost, sp)
+        placement.classes = jp.classes
+        return placement
+
+    def place_batch(
+        self,
+        jobs: Sequence[Job],
+        job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+    ) -> "BatchPlacement":
+        """Batched ``place`` loop: the §IV planes are evaluated once and
+        the per-placement queue feedback is replayed between rows, so
+        assignments, costs and final site state are bit-identical to
+        ``[self.place(j) for j in jobs]``."""
+        from . import batch as _batch
+
+        return _batch.replay_place(
+            jobs, self.sites, self.links, self.weights, job_classes, commit=True
+        )
 
     def complete(self, job: Job) -> None:
         """Release a finished job's claim on its site."""

@@ -5,6 +5,11 @@ against every peer site on each scheduling pass — at bulk scale that is
 a (10⁴..10⁶ jobs) × (10²..10³ sites) elementwise grid. Jobs tile the
 sublane axis, sites the 128-lane axis; site state rides as (1, S_blk)
 rows broadcast down the tile.
+
+The §V job-class branches (COMPUTE / DATA / BOTH) ride as two extra
+(J, 1) mask columns — ``wcomp``/``wdtc`` multiply the computation and
+data-transfer planes per job, so one kernel pass serves all three
+selection keys (the network plane is always on).
 """
 from __future__ import annotations
 
@@ -19,10 +24,13 @@ JOB_BLOCK = 256
 SITE_BLOCK = 128
 
 
-def _kernel(jb_ref, jw_ref, site_ref, out_ref, *, w_queue, w_work, w_load, mss):
+def _kernel(jb_ref, jw_ref, wc_ref, wd_ref, site_ref, out_ref,
+            *, w_queue, w_work, w_load):
     jb = jb_ref[...]                       # (JB, 1)
     jw = jw_ref[...]
-    # site rows: cap, queue, work, load, bw, loss, rtt, alive — (8, SB)
+    wc = wc_ref[...]                       # (JB, 1) class mask: computation plane
+    wd = wd_ref[...]                       # (JB, 1) class mask: data-transfer plane
+    # site rows: cap, queue, work, load, bw, loss, rtt, alive, mss — (9, SB)
     cap = site_ref[0:1, :]
     queue = site_ref[1:2, :]
     work = site_ref[2:3, :]
@@ -31,34 +39,43 @@ def _kernel(jb_ref, jw_ref, site_ref, out_ref, *, w_queue, w_work, w_load, mss):
     loss = site_ref[5:6, :]
     rtt = site_ref[6:7, :]
     alive = site_ref[7:8, :]
+    mss = site_ref[8:9, :]
     mathis = mss / (rtt * jnp.sqrt(jnp.maximum(loss, 1e-12)))
     eff_bw = jnp.where(loss > 0.0, jnp.minimum(bw, mathis), bw)
     net = (loss / bw) * 1e6
     comp = (w_queue * queue + w_work * work) / cap + w_load * load + jw / cap
     dtc = jb / eff_bw
-    cost = net + comp + dtc
+    cost = net + wc * comp + wd * dtc
     out_ref[...] = jnp.where(alive > 0.5, cost, jnp.float32(3.0e38))
 
 
 def cost_matrix_pallas(
     job_bytes, job_work,          # (J, 1) f32, J % JOB_BLOCK == 0
-    site_rows,                    # (8, S) f32, S % SITE_BLOCK == 0
-    *, w_queue=1.0, w_work=1.0, w_load=1.0, mss=1460.0, interpret=False,
+    site_rows,                    # (9, S) f32, S % SITE_BLOCK == 0
+    job_wcomp=None, job_wdtc=None,  # (J, 1) f32 class masks; default all-ones
+    *, w_queue=1.0, w_work=1.0, w_load=1.0, interpret=False,
 ):
     J = job_bytes.shape[0]
     S = site_rows.shape[1]
+    if job_wcomp is None:
+        job_wcomp = jnp.ones_like(job_bytes)
+    if job_wdtc is None:
+        job_wdtc = jnp.ones_like(job_bytes)
     grid = (J // JOB_BLOCK, S // SITE_BLOCK)
     kern = functools.partial(
-        _kernel, w_queue=w_queue, w_work=w_work, w_load=w_load, mss=mss)
+        _kernel, w_queue=w_queue, w_work=w_work, w_load=w_load)
+    job_spec = pl.BlockSpec((JOB_BLOCK, 1), lambda i, j: (i, 0))
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((JOB_BLOCK, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((JOB_BLOCK, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((8, SITE_BLOCK), lambda i, j: (0, j)),
+            job_spec,
+            job_spec,
+            job_spec,
+            job_spec,
+            pl.BlockSpec((9, SITE_BLOCK), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((JOB_BLOCK, SITE_BLOCK), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((J, S), jnp.float32),
         interpret=interpret,
-    )(job_bytes, job_work, site_rows)
+    )(job_bytes, job_work, job_wcomp, job_wdtc, site_rows)

@@ -13,12 +13,29 @@ def cost_matrix_ref(
     w_queue=1.0, w_work=1.0, w_load=1.0, mss=1460.0,
 ):
     """Returns (cost (J,S) f32, best_site (J,) i32)."""
+    return cost_matrix_classed_ref(
+        job_bytes, job_work, None, None,
+        cap, queue, work, load, bw, loss, rtt, alive,
+        w_queue=w_queue, w_work=w_work, w_load=w_load, mss=mss,
+    )
+
+
+def cost_matrix_classed_ref(
+    job_bytes, job_work,                  # (J,)
+    job_wcomp, job_wdtc,                  # (J,) §V class masks, or None for all-ones
+    cap, queue, work, load, bw, loss, rtt, alive,   # (S,)
+    w_queue=1.0, w_work=1.0, w_load=1.0, mss=1460.0,
+):
+    """Per-class §IV cost: net + wcomp·comp + wdtc·dtc (kernel oracle)."""
     jb = jnp.asarray(job_bytes, jnp.float32)[:, None]
     jw = jnp.asarray(job_work, jnp.float32)[:, None]
+    wc = jnp.ones_like(jb) if job_wcomp is None else jnp.asarray(job_wcomp, jnp.float32)[:, None]
+    wd = jnp.ones_like(jb) if job_wdtc is None else jnp.asarray(job_wdtc, jnp.float32)[:, None]
     cap = jnp.asarray(cap, jnp.float32)[None, :]
     loss = jnp.asarray(loss, jnp.float32)
     bw = jnp.asarray(bw, jnp.float32)
     rtt = jnp.asarray(rtt, jnp.float32)
+    mss = jnp.asarray(mss, jnp.float32)      # scalar or per-link (S,)
     mathis = mss / (rtt * jnp.sqrt(jnp.maximum(loss, 1e-12)))
     eff_bw = jnp.where(loss > 0.0, jnp.minimum(bw, mathis), bw)
     net = (loss / bw)[None, :] * 1e6
@@ -29,7 +46,7 @@ def cost_matrix_ref(
         + jw / cap
     )
     dtc = jb / eff_bw[None, :]
-    cost = net + comp + dtc
+    cost = net + wc * comp + wd * dtc
     big = jnp.float32(3.0e38)
     cost = jnp.where(jnp.asarray(alive, bool)[None, :], cost, big)
     return cost, jnp.argmin(cost, axis=1).astype(jnp.int32)

@@ -148,6 +148,7 @@ class GridSim:
         congestion_window_s: float = 300.0,
         weights: CostWeights = CostWeights(w_queue=0.0, w_work=1.0, w_load=0.0),
         bucket_s: float = 60.0,
+        batch_arrivals: bool = True,
     ):
         assert policy in ("diana", "greedy", "local", "fcfs")
         self.policy = policy
@@ -157,6 +158,7 @@ class GridSim:
         self.migration_interval_s = migration_interval_s
         self.congestion_window_s = congestion_window_s
         self.bucket_s = bucket_s
+        self.batch_arrivals = batch_arrivals
         self.sites = {
             name: _Site(name, n, self.quotas, use_mlfq=(policy == "diana"))
             for name, n in site_nodes.items()
@@ -168,6 +170,36 @@ class GridSim:
             s: {"submitted": [], "executed": [], "exported": [], "imported": []}
             for s in self.sites
         }
+        # Columns in sorted-name order: np.argmin's first-index tie-break
+        # then matches choose_site's (cost, name) tuple sort exactly.
+        self._names_sorted = sorted(self.sites)
+        self._site_idx = {n: i for i, n in enumerate(self._names_sorted)}
+        self._loss: Optional[np.ndarray] = None  # built on first batch
+
+    def _link_matrices_ready(self) -> bool:
+        """Build the dense WAN-link matrices for the arrival-batch fast
+        path on first use. A partial link table (only the pairs the
+        sequential path happens to traverse) can't be densified — then
+        the fast path is disabled and arrivals fall back to the
+        sequential handler instead of crashing previously-valid setups."""
+        if self._loss is not None:
+            return True
+        S = len(self._names_sorted)
+        loss = np.empty((S, S))
+        bw = np.empty((S, S))
+        eff = np.empty((S, S))
+        try:
+            for a, na in enumerate(self._names_sorted):
+                for b, nb in enumerate(self._names_sorted):
+                    link = self.links[(na, nb)]
+                    loss[a, b] = link.loss_rate
+                    bw[a, b] = link.bandwidth_Bps
+                    eff[a, b] = link.effective_bandwidth()
+        except KeyError:
+            self.batch_arrivals = False
+            return False
+        self._loss, self._bw, self._eff = loss, bw, eff
+        return True
 
     # -- cost model (§IV on simulator state) --------------------------------
     def _eff_bw(self, a: str, b: str) -> float:
@@ -207,6 +239,84 @@ class GridSim:
         )
         return costs[0][1]
 
+    # -- batched §IV evaluation (arrival-batch fast path) ---------------------
+    def _batch_eligible(self, batch: list[SimJob]) -> bool:
+        """The dense fast path needs a full link table AND every job
+        endpoint to be a grid site; jobs whose data/origin lives on a
+        link-table-only node (e.g. a storage element) go through the
+        sequential handler, which indexes links by tuple directly."""
+        if self.policy != "diana" or not self._link_matrices_ready():
+            return False
+        idx = self._site_idx
+        return all(
+            sj.origin_site in idx
+            and (sj.data_site is None or sj.data_site in idx)
+            for sj in batch
+        )
+
+    def _static_cost_rows(self, batch: list[SimJob]) -> tuple[np.ndarray, np.ndarray]:
+        """(net, dtc) rows of ``placement_cost`` over sorted-site columns
+        for a batch of jobs — the per-job-constant terms, vectorized
+        over the dense WAN-link matrices."""
+        if not self._link_matrices_ready():
+            raise KeyError("link table is partial; dense matrices unavailable")
+        S = len(self._names_sorted)
+        o = np.asarray([self._site_idx[sj.origin_site] for sj in batch])
+        net = (self._loss[o, :] / self._bw[o, :]) * 1.0e6
+        cols = np.arange(S)[None, :]
+        inb = np.asarray([sj.input_bytes for sj in batch])
+        outb = np.asarray([sj.output_bytes for sj in batch])
+        has_data = np.asarray([sj.data_site is not None for sj in batch])
+        d = np.asarray(
+            [self._site_idx[sj.data_site] if sj.data_site is not None else 0
+             for sj in batch]
+        )
+        in_term = np.where(
+            has_data[:, None] & (d[:, None] != cols),
+            inb[:, None] / self._eff[d, :], 0.0,
+        )
+        out_term = np.where(
+            o[:, None] != cols, outb[:, None] / self._eff[:, o].T, 0.0
+        )
+        return net, in_term + out_term
+
+    def _comp_vec(self, sj: SimJob) -> np.ndarray:
+        """Live computation-cost column (the only term arrivals mutate).
+
+        Deliberately re-reads full site state per job (same work as the
+        sequential path's ``placement_cost``): MLFQ dispatch pops jobs
+        from queue middles between admissions, and ``queued_work`` is a
+        fresh ordered float sum, so an incremental update would not be
+        bit-identical. The fast path's win is the vectorized net/dtc
+        planes and skipping the per-job (cost, name) sort."""
+        vals = []
+        for n in self._names_sorted:
+            st = self.sites[n].state()
+            vals.append(computation_cost(st, self.weights) + sj.work / st.capacity)
+        return np.asarray(vals)
+
+    def choose_sites_batch(self, batch: list[SimJob]) -> list[str]:
+        """Vectorized ``choose_site`` over a batch against the current
+        state snapshot (no admissions in between) — equivalent to
+        ``[self.choose_site(sj) for sj in batch]`` with untouched state.
+        The event loop's fast path (``_on_arrive_batch``) interleaves
+        the same evaluation with admissions instead."""
+        if not self._batch_eligible(batch):
+            return [self.choose_site(sj) for sj in batch]
+        net, dtc = self._static_cost_rows(batch)
+        # State is frozen here, so the job-independent computation base
+        # is computed once; adding sj.work/cap per row keeps the same
+        # two-term addition as placement_cost (bit-identical).
+        base = np.asarray(
+            [computation_cost(self.sites[n].state(), self.weights)
+             for n in self._names_sorted]
+        )
+        cap = np.asarray([float(self.sites[n].nodes) for n in self._names_sorted])
+        return [
+            self._names_sorted[int(np.argmin((net[i] + (base + sj.work / cap)) + dtc[i]))]
+            for i, sj in enumerate(batch)
+        ]
+
     # -- simulation ------------------------------------------------------------
     def run(self, jobs: list[SimJob], until: Optional[float] = None) -> SimResult:
         events: list[tuple[float, int, str, object]] = []
@@ -225,7 +335,20 @@ class GridSim:
             if now > horizon:
                 break
             if kind == "arrive":
-                self._on_arrive(payload, now, events)
+                # Same-instant arrivals pop consecutively (their seqs are
+                # the lowest at that timestamp), so draining them here is
+                # order-identical to one-at-a-time processing.
+                if self.batch_arrivals and self.policy == "diana":
+                    batch = [payload]
+                    while events and events[0][0] == now and events[0][2] == "arrive":
+                        batch.append(heapq.heappop(events)[3])
+                    if len(batch) > 1 and self._batch_eligible(batch):
+                        self._on_arrive_batch(batch, now, events)
+                    else:
+                        for sj in batch:
+                            self._on_arrive(sj, now, events)
+                else:
+                    self._on_arrive(payload, now, events)
             elif kind == "finish":
                 site_name, cj = payload
                 self._on_finish(site_name, cj, now, events)
@@ -251,7 +374,20 @@ class GridSim:
         series[idx] += 1
 
     def _on_arrive(self, sj: SimJob, now: float, events: list) -> None:
-        target = self.choose_site(sj)
+        self._admit(sj, self.choose_site(sj), now, events)
+
+    def _on_arrive_batch(self, batch: list[SimJob], now: float, events: list) -> None:
+        """Arrival-batch fast path (§VIII bulk bursts): the static
+        network + data-transfer planes are evaluated once for the whole
+        same-instant batch; per job only the computation term is
+        re-read from live site state, so placements are bit-identical
+        to sequential ``_on_arrive`` calls."""
+        net, dtc = self._static_cost_rows(batch)
+        for i, sj in enumerate(batch):
+            row = (net[i] + self._comp_vec(sj)) + dtc[i]
+            self._admit(sj, self._names_sorted[int(np.argmin(row))], now, events)
+
+    def _admit(self, sj: SimJob, target: str, now: float, events: list) -> None:
         sj.exec_site = target
         sj.queue_enter = now
         cj = Job(

@@ -1,0 +1,201 @@
+"""Minimal offline stand-in for ``hypothesis``.
+
+The seed's property tests were written against the real Hypothesis
+library, which is not installed in the (network-less) CI image. This
+shim implements just the surface those tests use — ``given``,
+``settings`` and the ``strategies`` namespace — by drawing a fixed
+number of deterministically seeded examples per test instead of doing
+adaptive search/shrinking.
+
+Determinism: the RNG seed is derived from the test's qualified name,
+so a given test always sees the same example sequence run-to-run.
+Boundary values (min/max of integer and float ranges) are always
+emitted first, since those are the examples real Hypothesis finds most
+often.
+
+Test modules use it via try-import::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:                      # offline CI image
+        from _hypothesis_compat import given, settings, strategies as st
+
+so a developer box with real Hypothesis installed still gets the real
+thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import zlib
+from types import SimpleNamespace
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+# Cap on examples per test so fast CI stays fast; tests requesting more
+# via @settings(max_examples=...) are clamped. Override with the env var.
+_EXAMPLE_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_EXAMPLES", "25"))
+_DEFAULT_EXAMPLES = 25
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw, boundaries=(), name="strategy"):
+        self._draw = draw
+        self.boundaries = tuple(boundaries)
+        self.name = name
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"<{self.name}>"
+
+    def map(self, fn):
+        return Strategy(lambda r: fn(self._draw(r)), name=f"{self.name}.map")
+
+    def filter(self, pred, _tries=100):
+        def draw(r):
+            for _ in range(_tries):
+                v = self._draw(r)
+                if pred(v):
+                    return v
+            raise ValueError(f"filter on {self.name} found no example")
+
+        return Strategy(draw, name=f"{self.name}.filter")
+
+
+def integers(min_value, max_value):
+    return Strategy(
+        lambda r: r.randint(min_value, max_value),
+        boundaries=(min_value, max_value),
+        name=f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(min_value, max_value, **_kw):
+    return Strategy(
+        lambda r: r.uniform(min_value, max_value),
+        boundaries=(float(min_value), float(max_value)),
+        name=f"floats({min_value}, {max_value})",
+    )
+
+
+def booleans():
+    return Strategy(lambda r: bool(r.getrandbits(1)), boundaries=(False, True),
+                    name="booleans()")
+
+
+def just(value):
+    return Strategy(lambda r: value, boundaries=(value,), name=f"just({value!r})")
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return Strategy(
+        lambda r: elements[r.randrange(len(elements))],
+        boundaries=(elements[0], elements[-1]),
+        name=f"sampled_from({len(elements)} elements)",
+    )
+
+
+def tuples(*strats):
+    return Strategy(
+        lambda r: tuple(s.example(r) for s in strats),
+        name=f"tuples(×{len(strats)})",
+    )
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+    return Strategy(
+        lambda r: [elements.example(r) for _ in range(r.randint(min_size, hi))],
+        name=f"lists[{min_size}..{hi}]",
+    )
+
+
+strategies = SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    just=just,
+    sampled_from=sampled_from,
+    tuples=tuples,
+    lists=lists,
+)
+
+# Accepted (and ignored) for signature compatibility with real Hypothesis.
+HealthCheck = SimpleNamespace(too_slow="too_slow", filter_too_much="filter_too_much",
+                              data_too_large="data_too_large")
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Record requested example count; other knobs are accepted and ignored."""
+
+    def deco(fn):
+        fn._hc_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    """Run the test body over deterministic seeded examples.
+
+    Works in either decorator order relative to ``@settings`` (the
+    settings dict is read lazily at call time; ``functools.wraps``
+    propagates it when settings is the inner decorator).
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = [p.name for p in sig.parameters.values() if p.name != "self"]
+        # Like real Hypothesis, positional strategies map to the
+        # RIGHTMOST parameters (so fixtures to the left keep working);
+        # everything is then drawn and passed by keyword.
+        strats = dict(kw_strats)
+        if arg_strats:
+            pos_names = [n for n in names if n not in kw_strats][-len(arg_strats):]
+            strats.update(zip(pos_names, arg_strats))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_hc_settings", {})
+            n = min(conf.get("max_examples", _DEFAULT_EXAMPLES), _EXAMPLE_CAP)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            examples = _boundary_examples(strats)
+            while len(examples) < n:
+                examples.append({k: s.example(rng) for k, s in strats.items()})
+            for i, drawn in enumerate(examples[:n]):
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except BaseException:
+                    print(
+                        f"[hypothesis-compat] {fn.__qualname__} falsified on "
+                        f"example #{i}: {drawn!r}"
+                    )
+                    raise
+
+        # Hide consumed parameters from pytest's fixture resolution
+        # (real Hypothesis does the same); __signature__ takes
+        # precedence over __wrapped__ in inspect.signature.
+        keep = [p for p in sig.parameters.values() if p.name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco
+
+
+def _boundary_examples(strats):
+    """Min/max corner draws emitted ahead of the random stream."""
+    out = []
+    if all(s.boundaries for s in strats.values()):
+        for pick in (0, -1):
+            out.append({k: s.boundaries[pick] for k, s in strats.items()})
+    return out

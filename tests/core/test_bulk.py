@@ -1,7 +1,10 @@
 """§VIII bulk scheduling — including the paper's Fig 4 table, exactly."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     BulkGroup,
@@ -47,6 +50,19 @@ class TestFig4PaperTable:
         alloc = {"A": 1000, "B": 2000, "C": 3000, "D": 4000}
         span = average_makespan(alloc, FIG4_CAPS)
         assert span == pytest.approx(8.54, abs=0.01)
+
+    def test_fig4_worked_example_regression(self):
+        """The full Fig 4 table in one pin: average per-site makespans
+        of 16.6 h / 10 h / 8.5 h for 1 / 2 / 10 subgroups of 10 000
+        one-hour jobs over 100/200/400/600-CPU sites."""
+        one = average_makespan(allocate_proportional(10_000, 1, FIG4_CAPS), FIG4_CAPS)
+        two = average_makespan(allocate_proportional(10_000, 2, FIG4_CAPS), FIG4_CAPS)
+        # Paper's rounded 10-subgroup row (1000/2000/3000/4000 ∝ 1:2:3:4).
+        ten = average_makespan({"A": 1000, "B": 2000, "C": 3000, "D": 4000}, FIG4_CAPS)
+        assert one == pytest.approx(16.6, abs=0.07)
+        assert two == pytest.approx(10.0)
+        assert ten == pytest.approx(8.5, abs=0.05)
+        assert one > two > ten
 
     def test_smaller_groups_never_worse(self):
         """Fig 4's conclusion: 'Smaller job groups mean greater

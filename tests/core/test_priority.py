@@ -1,8 +1,11 @@
 """§X priority — including the paper's Fig 6 worked example, exactly."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import priority as prio
 

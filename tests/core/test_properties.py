@@ -1,8 +1,11 @@
 """Hypothesis property tests for system-level DIANA invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     DianaScheduler, Job, JobClass, MultilevelFeedbackQueues, NetworkLink,

@@ -11,6 +11,8 @@ from repro.models import LM, ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
 from repro.checkpoint import CheckpointManager
 
+pytestmark = pytest.mark.slow  # compile-heavy model tests
+
 CFG = ModelConfig(name="ci-tiny", num_layers=2, d_model=128, num_heads=4,
                   num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
                   param_dtype="float32", compute_dtype="float32", remat=False,

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import get_config, list_archs
 from repro.models import LM, decode
 
+pytestmark = pytest.mark.slow  # compile-heavy model tests
+
 ARCHS = list_archs()
 
 

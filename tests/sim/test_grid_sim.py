@@ -139,3 +139,94 @@ def test_fcfs_baseline_single_queue():
     # FCFS order: starts are non-decreasing in arrival order.
     starts = [j.start for j in res.jobs]
     assert starts == sorted(starts)
+
+
+def test_policy_ordering_regression():
+    """§XI headline regression: DIANA's turnaround never loses to any
+    baseline on the data-heavy workload (Fig 7/8 ordering)."""
+    jobs = _data_heavy_workload(120)
+    turnarounds = {
+        policy: _run(policy, jobs).avg_turnaround
+        for policy in ("diana", "greedy", "local", "fcfs")
+    }
+    assert turnarounds["diana"] <= turnarounds["greedy"]
+    assert turnarounds["diana"] <= turnarounds["fcfs"]
+    assert turnarounds["diana"] <= turnarounds["local"]
+
+
+class TestArrivalBatchFastPath:
+    """The vectorized same-instant arrival path must be bit-identical
+    to sequential per-arrival processing."""
+
+    def _burst_workload(self):
+        rng = np.random.default_rng(7)
+        jobs = []
+        for b in range(5):
+            jobs.extend(
+                bulk_burst(f"u{b % 2}", 40, at=float(b * 40), work=80.0,
+                           input_bytes=4e9, output_bytes=2e8,
+                           data_site="site3", origin_site="site1",
+                           rng=rng, work_jitter=0.3)
+            )
+        return sorted(jobs, key=lambda j: j.arrival)
+
+    def _compare(self, jobs, **kw):
+        seq = GridSim(paper_grid_spec(), policy="diana",
+                      batch_arrivals=False, **kw).run(copy.deepcopy(jobs))
+        bat = GridSim(paper_grid_spec(), policy="diana",
+                      batch_arrivals=True, **kw).run(copy.deepcopy(jobs))
+        assert [j.exec_site for j in seq.jobs] == [j.exec_site for j in bat.jobs]
+        assert [j.start for j in seq.jobs] == [j.start for j in bat.jobs]
+        assert [j.finish for j in seq.jobs] == [j.finish for j in bat.jobs]
+        assert seq.avg_turnaround == bat.avg_turnaround
+
+    def test_bulk_bursts_identical(self):
+        self._compare(self._burst_workload())
+
+    def test_with_quotas_and_migration_identical(self):
+        jobs = _overload_workload()
+        self._compare(jobs, quotas=QUOTAS, migration_interval_s=30.0,
+                      congestion_window_s=120.0)
+
+    @pytest.mark.parametrize("policy", ["diana", "greedy", "local", "fcfs"])
+    def test_choose_sites_batch_matches_choose_site_snapshot(self, policy):
+        jobs = self._burst_workload()
+        sim = GridSim(paper_grid_spec(), policy=policy)
+        assert sim.choose_sites_batch(jobs) == [sim.choose_site(j) for j in jobs]
+
+    def test_off_grid_job_endpoints_fall_back_to_sequential(self):
+        """Jobs whose data lives on a link-table-only node (a storage
+        element, not a compute site) must not crash the fast path."""
+        from repro.sim import uniform_links
+
+        links = uniform_links(["site1", "site2", "storage"])
+        nodes = {"site1": 2, "site2": 2}
+        jobs = bulk_burst("u", 10, at=0.0, work=5.0, input_bytes=2e9,
+                          data_site="storage", origin_site="site1")
+        bat = GridSim(nodes, links=links, policy="diana",
+                      batch_arrivals=True).run(copy.deepcopy(jobs))
+        seq = GridSim(nodes, links=links, policy="diana",
+                      batch_arrivals=False).run(copy.deepcopy(jobs))
+        assert all(j.finish >= 0 for j in bat.jobs)
+        assert [j.exec_site for j in bat.jobs] == [j.exec_site for j in seq.jobs]
+        assert [j.finish for j in bat.jobs] == [j.finish for j in seq.jobs]
+
+    def test_partial_link_table_falls_back_to_sequential(self):
+        """A link dict covering only the pairs the sequential path
+        traverses can't be densified — the fast path must disable
+        itself, not crash, and results must match the sequential run."""
+        from repro.sim import uniform_links
+
+        names = ["site1", "site2", "site3"]
+        links = {k: v for k, v in uniform_links(names).items()
+                 if "site1" in k or k[0] == k[1]}
+        jobs = bulk_burst("u", 20, at=0.0, work=5.0, input_bytes=1e9,
+                          data_site="site1", origin_site="site1")
+        nodes = {n: 2 for n in names}
+        bat = GridSim(nodes, links=links, policy="diana", batch_arrivals=True)
+        res = bat.run(copy.deepcopy(jobs))
+        assert bat.batch_arrivals is False
+        seq = GridSim(nodes, links=links, policy="diana",
+                      batch_arrivals=False).run(copy.deepcopy(jobs))
+        assert all(j.finish >= 0 for j in res.jobs)
+        assert [j.exec_site for j in res.jobs] == [j.exec_site for j in seq.jobs]

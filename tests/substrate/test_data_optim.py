@@ -1,8 +1,11 @@
 """Data pipeline determinism/sharding + optimizer behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
