@@ -81,11 +81,12 @@ def bench(jobs: int = 10_000, sites: int = 256, seed: int = 0) -> dict:
     }
 
 
-def run() -> None:
+def run() -> dict:
     """CSV row for the aggregate harness (reduced size to stay quick)."""
     rec = bench(jobs=2_000, sites=256)
     emit("bulk_placement_batch_vs_loop", rec["batch_s"] * 1e6,
          f"speedup={rec['speedup']}x over {rec['jobs']}x{rec['sites']}")
+    return rec
 
 
 if __name__ == "__main__":

@@ -3,6 +3,15 @@ from __future__ import annotations
 
 import time
 
+# Rows emitted since the last drain — the harness (benchmarks/run.py)
+# snapshots these per module into BENCH_<name>.json.
+RECORDS: list[dict] = []
+
+
+def drain_records() -> list[dict]:
+    rows, RECORDS[:] = list(RECORDS), []
+    return rows
+
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
     """Median wall-clock microseconds per call."""
@@ -18,4 +27,6 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -30,7 +30,7 @@ def _overload(n_bursts=6, burst=40):
     return sorted(jobs, key=lambda j: j.arrival)
 
 
-def run() -> None:
+def run() -> dict:
     # Fig 9: overloaded grid exports from hot sites
     sim = GridSim(paper_grid_spec(), policy="diana", quotas=QUOTAS,
                   migration_interval_s=30.0, congestion_window_s=120.0)
@@ -56,6 +56,16 @@ def run() -> None:
          f"exported={exported[busiest]};imported={imported[busiest]}")
     emit("fig9_11_all_jobs_completed", 0.0,
          f"completed={sum(1 for j in res.jobs if j.finish >= 0)}/{len(res.jobs)}")
+    return {
+        "bench": "fig9_11_migration",
+        "exported_total": sum(exported.values()),
+        "imported_total": sum(imported.values()),
+        "migrations": res.migrations(),
+        "big_site_imports": sum(res2.timeline["big"]["imported"]),
+        "busiest_site": busiest,
+        "completed": sum(1 for j in res.jobs if j.finish >= 0),
+        "jobs": len(res.jobs),
+    }
 
 
 if __name__ == "__main__":

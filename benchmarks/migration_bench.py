@@ -1,0 +1,136 @@
+"""BENCH: batched §IX/§X congestion migration vs the per-job loop.
+
+Builds a grid whose every site is congested with a Q4-heavy backlog
+(low-quota 'hog' flood behind a high-quota 'polite' stream, the §X
+recipe), then times one full migration tick through the sequential
+``_on_migrate_check`` loop and through the batched engine
+(``select_peers_batch`` over the memoized static cost planes), verifies
+the decisions are bit-identical, and reports the speedup.
+
+    PYTHONPATH=src python benchmarks/migration_bench.py [--jobs N] [--sites S]
+
+The full-size run (10k jobs × 256 sites) writes ``BENCH_migration.json``
+at the repo root; ``--smoke`` skips the file for the CI toy size.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import Job
+from repro.sim import GridSim
+from repro.sim.workloads import SimJob
+
+try:
+    from .common import emit
+except ImportError:                       # run as a script
+    from common import emit
+
+QUOTAS = {"hog": 10.0, "polite": 1000.0}
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _congested_sim(jobs: int, sites: int, seed: int = 0,
+                   batch_migration: bool = True) -> tuple[GridSim, float]:
+    """A grid where every site's queue is backed up and congested: jobs
+    spread round-robin, arrivals inside the congestion window, no
+    service — (arrival − service)/arrival = 1 > Thrs at every site."""
+    rng = np.random.default_rng(seed)
+    names = [f"s{i:03d}" for i in range(sites)]
+    sim = GridSim({n: 2 for n in names}, policy="diana", quotas=QUOTAS,
+                  migration_interval_s=60.0, congestion_window_s=300.0,
+                  batch_migration=batch_migration)
+    now = 100.0
+    for k in range(jobs):
+        name = names[k % sites]
+        # Per site: 2 running fillers, then a couple of high-quota
+        # 'polite' jobs, then the low-quota 'hog' flood — the flood
+        # crosses N=(q·T)/(Q·t) and sinks to Q4 (§X).
+        user = "polite" if (k // sites) < 4 else "hog"
+        work = float(rng.uniform(50.0, 500.0))
+        sj = SimJob(user=user, arrival=now, work=work,
+                    input_bytes=float(rng.uniform(0, 5e9)),
+                    output_bytes=float(rng.uniform(0, 5e8)),
+                    data_site=names[int(rng.integers(sites))],
+                    origin_site=names[int(rng.integers(sites))])
+        cj = Job(user=user, t=1.0, submit_time=now, compute_work=sj.work,
+                 input_bytes=sj.input_bytes, output_bytes=sj.output_bytes)
+        sim._cj2sj[cj.job_id] = sj
+        sj.exec_site = name
+        # saturate the nodes so migrated jobs queue instead of starting
+        site = sim.sites[name]
+        if site.busy < site.nodes:
+            site.busy += 1
+            site.running_work += sj.work
+        else:
+            site.enqueue(cj, now=now)
+    return sim, now
+
+
+def _snapshot(sim: GridSim) -> dict:
+    return {
+        "exported": {s: sum(sim.timeline[s]["exported"]) for s in sim.timeline},
+        "imported": {s: sum(sim.timeline[s]["imported"]) for s in sim.timeline},
+        "moves": {jid: (sj.exec_site, sj.migrated)
+                  for jid, sj in sim._cj2sj.items()},
+        "queues": {n: sorted(j.job_id for j in s.mlfq.jobs)
+                   for n, s in sim.sites.items()},
+    }
+
+
+def bench(jobs: int = 10_000, sites: int = 256, seed: int = 0) -> dict:
+    base, now = _congested_sim(jobs, sites, seed)
+    tick = now + 60.0
+
+    seq = copy.deepcopy(base)
+    seq.batch_migration = False
+    t0 = time.perf_counter()
+    seq._on_migrate_check(tick, [])
+    seq_s = time.perf_counter() - t0
+
+    bat = copy.deepcopy(base)
+    t0 = time.perf_counter()
+    bat._on_migrate_check(tick, [])
+    batch_s = time.perf_counter() - t0
+
+    s_seq, s_bat = _snapshot(seq), _snapshot(bat)
+    if s_seq != s_bat:  # explicit: must survive python -O
+        raise AssertionError("batched migration diverged from sequential")
+    moves = sum(1 for _, m in s_bat["moves"].values() if m)
+    return {
+        "bench": "migration",
+        "jobs": jobs,
+        "sites": sites,
+        "migrations": moves,
+        "seq_s": round(seq_s, 4),
+        "batch_s": round(batch_s, 4),
+        "speedup": round(seq_s / batch_s, 1),
+        "identical_decisions": True,
+    }
+
+
+def run() -> dict:
+    """CSV row for the aggregate harness (reduced size to stay quick)."""
+    rec = bench(jobs=1_000, sites=64)
+    emit("migration_batch_vs_loop", rec["batch_s"] * 1e6,
+         f"speedup={rec['speedup']}x over {rec['jobs']}x{rec['sites']}")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=10_000)
+    ap.add_argument("--sites", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: don't write BENCH_migration.json")
+    args = ap.parse_args()
+    rec = bench(args.jobs, args.sites, args.seed)
+    print("BENCH " + json.dumps(rec))
+    if not args.smoke:
+        (REPO_ROOT / "BENCH_migration.json").write_text(json.dumps(rec, indent=2) + "\n")

@@ -81,3 +81,26 @@ sweeps = [BulkGroup(user=f"grad{i}", group_id=f"sweep-{i}", division_factor=2,
           for i in range(4)]
 for g, p in zip(sweeps, BulkScheduler(diana).schedule_groups(sweeps)):
     print(f"   {g.group_id}: split={p.split} sites={p.sites}")
+
+# --- 6. §IX/§X: congestion-driven migration, batched ----------------------
+# In the grid simulator every congested site's Q4 candidates are
+# evaluated against all peers as ONE (jobs × sites) matrix pass
+# (select_peers_batch over memoized §IV cost planes) — bit-identical to
+# polling each peer per job, but vectorized (see
+# benchmarks/migration_bench.py: >10x at 10k jobs × 256 sites).
+from repro.sim import GridSim, bulk_burst, paper_grid_spec
+
+flood = []
+for b in range(6):                       # a low-quota user floods site1
+    flood += bulk_burst("bart", 40, at=float(b * 30), work=300.0,
+                        input_bytes=2e9, data_site="site1", origin_site="site1")
+for i in range(40):                      # a high-quota user queues behind
+    flood += bulk_burst("lisa", 1, at=float(i * 20), work=300.0,
+                        input_bytes=2e9, data_site="site1", origin_site="site1")
+sim = GridSim(paper_grid_spec(), policy="diana",
+              quotas={"bart": 10.0, "lisa": 1000.0},
+              migration_interval_s=30.0, congestion_window_s=120.0)
+res = sim.run(sorted(flood, key=lambda j: j.arrival))
+exports = {s: sum(res.timeline[s]["exported"]) for s in res.timeline}
+print(f"\ncongestion migration (batched §IX pass): {res.migrations()} moves, "
+      "exports " + ", ".join(f"{s}:{n}" for s, n in exports.items() if n))

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Fast CI tier: everything except the multi-minute dryrun/model-compile
-# tests (marked `slow`). Target: < 60 s on a laptop-class CPU.
+# tests (marked `slow`), plus a toy-size migration bench smoke so the
+# batched §IX path is exercised end to end. Target: < 60 s on a
+# laptop-class CPU.
 #
 #   scripts/ci.sh               # fast tier
 #   scripts/ci.sh -k batch      # extra pytest args pass through
@@ -9,6 +11,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${RUN_SLOW:-0}" == "1" ]]; then
-    exec python -m pytest -q "$@"
+    python -m pytest -q "$@"
+else
+    python -m pytest -q -m "not slow" "$@"
 fi
-exec python -m pytest -q -m "not slow" "$@"
+# Bench smoke: sequential-vs-batched migration must stay bit-identical
+# at toy size (asserts inside the bench; no JSON written).
+python benchmarks/migration_bench.py --jobs 100 --sites 16 --smoke

@@ -30,7 +30,13 @@ from .bulk import (
     allocate_proportional,
     average_makespan,
 )
-from .migration import MigrationDecision, PeerView, migrate_congested, select_peer
+from .migration import (
+    MigrationDecision,
+    PeerView,
+    migrate_congested,
+    select_peer,
+    select_peers_batch,
+)
 from .topology import GridTopology, Node, RootGrid, SubGrid
 from .batch import (
     BatchPlacement,
@@ -53,6 +59,7 @@ __all__ = [
     "BulkGroup", "BulkScheduler", "GroupPlacement",
     "allocate_proportional", "average_makespan",
     "MigrationDecision", "PeerView", "migrate_congested", "select_peer",
+    "select_peers_batch",
     "GridTopology", "Node", "RootGrid", "SubGrid",
     "BatchPlacement", "JobPack", "SitePack", "batched_argmin",
     "batched_cost_matrix", "cost_components", "replay_place",

@@ -98,9 +98,23 @@ class SitePack:
             alive=np.asarray([sites[n].alive for n in names], bool),
         )
 
-    def refresh_dynamic(self, sites: dict[str, SiteState]) -> None:
-        """Re-read queue/work/load/alive (between replay rounds)."""
-        for i, n in enumerate(self.names):
+    def refresh_dynamic(
+        self,
+        sites: dict[str, SiteState],
+        only: Optional[Sequence[str]] = None,
+    ) -> None:
+        """Re-read queue/work/load/alive (between replay rounds).
+
+        ``only`` restricts the refresh to the named columns — the
+        migration pass uses it to touch just the (source, target) pair
+        a move mutated instead of re-reading every site.
+        """
+        if only is None:
+            pairs: Sequence[tuple[int, str]] = list(enumerate(self.names))
+        else:
+            idx = {n: i for i, n in enumerate(self.names)}
+            pairs = [(idx[n], n) for n in only]
+        for i, n in pairs:
             s = sites[n]
             self.queue[i] = s.queue_length
             self.work[i] = s.waiting_work

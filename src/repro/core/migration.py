@@ -12,11 +12,20 @@ jobs migrate under congestion (§X).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
+
+import numpy as np
 
 from .queues import Job, MultilevelFeedbackQueues, is_congested
 
-__all__ = ["PeerView", "MigrationDecision", "select_peer", "migrate_congested"]
+__all__ = [
+    "PeerView",
+    "MigrationDecision",
+    "select_peer",
+    "select_peer_targets",
+    "select_peers_batch",
+    "migrate_congested",
+]
 
 
 @dataclass(frozen=True)
@@ -59,6 +68,120 @@ def select_peer(
         # but a congested local site still prefers the shorter queue.
         return MigrationDecision(True, target=best.name, reason="peer has fewer jobs ahead")
     return MigrationDecision(False, reason="local site is no worse")
+
+
+def _peer_argmin(
+    excluded: np.ndarray,
+    jobs_ahead: np.ndarray,
+    total_cost: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per row, the stable (jobs_ahead, total_cost)-lexicographic min
+    over the non-excluded columns: (ja_min (J,), best col (J,), best
+    cost (J,)). First index wins ties, like the sequential ``min``."""
+    ja = np.where(excluded[None, :], np.inf, np.asarray(jobs_ahead, np.float64))
+    cost = np.where(excluded[None, :], np.inf, np.asarray(total_cost, np.float64))
+    ja_min = ja.min(axis=1)
+    candidates = ja == ja_min[:, None]
+    cost_cand = np.where(candidates, cost, np.inf)
+    best = np.argmin(cost_cand, axis=1)
+    rows = np.arange(ja.shape[0])
+    # An all-inf cost row leaves argmin on a non-candidate column; the
+    # sequential min then keeps the first candidate in peer order.
+    miss = ~candidates[rows, best]
+    if miss.any():
+        best[miss] = np.argmax(candidates[miss], axis=1)
+    return ja_min, best, cost[rows, best]
+
+
+def select_peer_targets(
+    pinned: np.ndarray,
+    local_jobs_ahead: np.ndarray,
+    local_cost: np.ndarray,
+    excluded: np.ndarray,
+    jobs_ahead: np.ndarray,
+    total_cost: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Array core of ``select_peers_batch``: (migrate (J,) bool, best
+    column (J,) int). No per-row Python — the migration hot loop uses
+    this and materializes ``MigrationDecision`` objects only for rows
+    it actually applies. ``excluded`` marks dead/local columns."""
+    J = np.asarray(total_cost).shape[0]
+    if excluded.all():
+        return np.zeros(J, bool), np.zeros(J, np.int64)
+    ja_min, best, best_cost = _peer_argmin(excluded, jobs_ahead, total_cost)
+    lja = np.asarray(local_jobs_ahead, np.float64)
+    lcost = np.asarray(local_cost, np.float64)
+    migrate = (
+        ~np.asarray(pinned, bool)
+        & (ja_min < lja)
+        & ((best_cost <= lcost) | (best_cost < np.inf))
+    )
+    return migrate, best
+
+
+def select_peers_batch(
+    jobs: Sequence[Job],
+    local_name: str,
+    local_jobs_ahead: np.ndarray,
+    local_cost: np.ndarray,
+    names: Sequence[str],
+    jobs_ahead: np.ndarray,
+    total_cost: np.ndarray,
+    alive: Optional[np.ndarray] = None,
+) -> list[MigrationDecision]:
+    """Vectorized ``select_peer`` over a (J, S) peer grid.
+
+    ``names`` fixes the peer iteration order: ties on the
+    (jobs_ahead, total_cost) key resolve to the lowest column index,
+    exactly like the stable ``min`` walk over a ``PeerView`` list in
+    the same order. ``jobs_ahead``/``total_cost`` are (J, S) planes,
+    ``local_jobs_ahead``/``local_cost`` the (J,) local columns; a
+    column named ``local_name`` (and any dead column) is excluded the
+    way ``select_peer`` drops the local/dead entries. Decisions —
+    targets and reason strings — are identical to
+    ``[select_peer(j, local_name, lja, lc, peers) for ...]``.
+    """
+    J, S = np.asarray(total_cost).shape
+    if alive is None:
+        alive = np.ones(S, bool)
+    excluded = ~np.asarray(alive, bool) | np.asarray(
+        [n == local_name for n in names]
+    )
+    if excluded.all():
+        return [
+            MigrationDecision(False, reason="pinned: already migrated once")
+            if j.migrated
+            else MigrationDecision(False, reason="no alive peers")
+            for j in jobs
+        ]
+    ja_min, best, best_cost = _peer_argmin(excluded, jobs_ahead, total_cost)
+    lja = np.asarray(local_jobs_ahead, np.float64)
+    lcost = np.asarray(local_cost, np.float64)
+    decisions: list[MigrationDecision] = []
+    for j in range(J):
+        if jobs[j].migrated:
+            decisions.append(
+                MigrationDecision(False, reason="pinned: already migrated once")
+            )
+        elif ja_min[j] < lja[j] and best_cost[j] <= lcost[j]:
+            decisions.append(
+                MigrationDecision(
+                    True, target=names[best[j]],
+                    reason="peer has fewer jobs ahead at lower cost",
+                )
+            )
+        elif ja_min[j] < lja[j] and best_cost[j] < float("inf"):
+            decisions.append(
+                MigrationDecision(
+                    True, target=names[best[j]],
+                    reason="peer has fewer jobs ahead",
+                )
+            )
+        else:
+            decisions.append(
+                MigrationDecision(False, reason="local site is no worse")
+            )
+    return decisions
 
 
 def apply_migration(job: Job, decision: MigrationDecision, priority_bump: float = 0.1) -> Job:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -28,15 +29,18 @@ import numpy as np
 from repro.core import (
     CostWeights,
     Job,
+    JobPack,
     MultilevelFeedbackQueues,
     NetworkLink,
     PeerView,
+    SitePack,
     SiteState,
     computation_cost,
     network_cost,
     select_peer,
 )
-from repro.core.migration import apply_migration
+from repro.core.batch import comp_site_column
+from repro.core.migration import MigrationDecision, apply_migration, select_peer_targets
 from .workloads import SimJob
 
 __all__ = ["GridSim", "SimResult", "uniform_links"]
@@ -138,6 +142,11 @@ class _Site:
 class GridSim:
     """Deterministic event-driven simulation of one policy over a grid."""
 
+    # LRU bound on the memoized static cost rows (~4 KB/entry at S=256):
+    # arrival batches insert once-used rows; only queued migration
+    # candidates re-hit, and evicted rows rebuild vectorized next tick.
+    _STATIC_CACHE_MAX = 16_384
+
     def __init__(
         self,
         site_nodes: dict[str, int],
@@ -149,9 +158,14 @@ class GridSim:
         weights: CostWeights = CostWeights(w_queue=0.0, w_work=1.0, w_load=0.0),
         bucket_s: float = 60.0,
         batch_arrivals: bool = True,
+        batch_migration: bool = True,
     ):
         assert policy in ("diana", "greedy", "local", "fcfs")
         self.policy = policy
+        self._loss: Optional[np.ndarray] = None  # built on first batch
+        self._dense_failed = False               # partial table: don't retry
+        # job-signature → (net, dtc) static cost rows (see _static_cost_rows)
+        self._static_row_cache: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
         self.links = links or uniform_links(list(site_nodes))
         self.quotas = quotas or {}
         self.weights = weights
@@ -159,11 +173,13 @@ class GridSim:
         self.congestion_window_s = congestion_window_s
         self.bucket_s = bucket_s
         self.batch_arrivals = batch_arrivals
+        self._batch_arrivals_auto_disabled = False
+        self.batch_migration = batch_migration
         self.sites = {
             name: _Site(name, n, self.quotas, use_mlfq=(policy == "diana"))
             for name, n in site_nodes.items()
         }
-        self.central_fifo: list[Job] = []  # fcfs policy only
+        self.central_fifo: deque[Job] = deque()  # fcfs policy only
         self._cj2sj: dict[int, SimJob] = {}
         self._seq = itertools.count()
         self.timeline: dict[str, dict[str, list[int]]] = {
@@ -174,7 +190,43 @@ class GridSim:
         # then matches choose_site's (cost, name) tuple sort exactly.
         self._names_sorted = sorted(self.sites)
         self._site_idx = {n: i for i, n in enumerate(self._names_sorted)}
-        self._loss: Optional[np.ndarray] = None  # built on first batch
+        # Migration evaluates peers in sites-dict order (the sequential
+        # PeerView list order), not sorted order: _dict_perm maps dict
+        # position → sorted column so the (J, S) planes can be permuted
+        # into the order select_peer's stable min walks.
+        self._dict_names = list(self.sites)
+        self._dict_perm = np.asarray(
+            [self._site_idx[n] for n in self._dict_names], np.int64
+        )
+        self._dict_pos = {n: i for i, n in enumerate(self._dict_names)}
+        self._sp: Optional[SitePack] = None        # reused migration SitePack
+        self._mig_prio_cache: dict[str, np.ndarray] = {}
+
+    # -- link-table lifecycle -------------------------------------------------
+    @property
+    def links(self) -> dict[tuple[str, str], NetworkLink]:
+        return self._links
+
+    @links.setter
+    def links(self, value: dict[tuple[str, str], NetworkLink]) -> None:
+        self._links = value
+        self.invalidate_links()
+
+    def invalidate_links(self) -> None:
+        """Drop every plane derived from the link table (the dense WAN
+        matrices and the memoized static cost rows). Call after mutating
+        ``links`` in place; assigning a new table does it automatically.
+        A fast path disabled by an earlier partial table gets another
+        chance against the new one."""
+        self._loss = None
+        self._bw = self._eff = None
+        self._static_row_cache.clear()
+        self._dense_failed = False
+        # Re-enable the arrival fast path only if the old table's
+        # partialness disabled it (never override a user's own setting).
+        if getattr(self, "_batch_arrivals_auto_disabled", False):
+            self._batch_arrivals_auto_disabled = False
+            self.batch_arrivals = True
 
     def _link_matrices_ready(self) -> bool:
         """Build the dense WAN-link matrices for the arrival-batch fast
@@ -184,6 +236,8 @@ class GridSim:
         sequential handler instead of crashing previously-valid setups."""
         if self._loss is not None:
             return True
+        if self._dense_failed:          # known-partial: don't rescan S²
+            return False
         S = len(self._names_sorted)
         loss = np.empty((S, S))
         bw = np.empty((S, S))
@@ -196,7 +250,10 @@ class GridSim:
                     bw[a, b] = link.bandwidth_Bps
                     eff[a, b] = link.effective_bandwidth()
         except KeyError:
-            self.batch_arrivals = False
+            if self.batch_arrivals:
+                self.batch_arrivals = False
+                self._batch_arrivals_auto_disabled = True
+            self._dense_failed = True
             return False
         self._loss, self._bw, self._eff = loss, bw, eff
         return True
@@ -254,12 +311,57 @@ class GridSim:
             for sj in batch
         )
 
+    @staticmethod
+    def _static_sig(sj: SimJob) -> tuple:
+        """Memoization key for the per-job-constant (net, dtc) rows:
+        everything ``placement_cost`` reads besides live site state."""
+        return (sj.origin_site, sj.data_site, sj.input_bytes, sj.output_bytes)
+
     def _static_cost_rows(self, batch: list[SimJob]) -> tuple[np.ndarray, np.ndarray]:
         """(net, dtc) rows of ``placement_cost`` over sorted-site columns
-        for a batch of jobs — the per-job-constant terms, vectorized
-        over the dense WAN-link matrices."""
+        for a batch of jobs — the per-job-constant terms, memoized by job
+        signature. Each row depends only on its own job (the vectorized
+        evaluation is elementwise per row), so rows cached from earlier
+        batches are bit-identical to recomputing them; the migration
+        pass re-evaluates the same congested jobs every tick and hits
+        the cache. ``invalidate_links`` clears it."""
         if not self._link_matrices_ready():
             raise KeyError("link table is partial; dense matrices unavailable")
+        S = len(self._names_sorted)
+        net = np.empty((len(batch), S))
+        dtc = np.empty((len(batch), S))
+        miss: list[SimJob] = []
+        miss_rows: list[list[int]] = []
+        pending: dict[tuple, int] = {}  # bulk bursts share one signature
+        cache = self._static_row_cache
+        for i, sj in enumerate(batch):
+            sig = self._static_sig(sj)
+            hit = cache.pop(sig, None)
+            if hit is not None:
+                cache[sig] = hit        # re-insert: LRU order via dict
+                net[i], dtc[i] = hit
+                continue
+            k = pending.get(sig)
+            if k is None:
+                pending[sig] = len(miss)
+                miss.append(sj)
+                miss_rows.append([i])
+            else:
+                miss_rows[k].append(i)
+        if miss:
+            mnet, mdtc = self._compute_static_rows(miss)
+            for k, rows in enumerate(miss_rows):
+                row = (mnet[k].copy(), mdtc[k].copy())
+                cache[self._static_sig(miss[k])] = row
+                for i in rows:
+                    net[i], dtc[i] = row
+            while len(cache) > self._STATIC_CACHE_MAX:
+                cache.pop(next(iter(cache)))
+        return net, dtc
+
+    def _compute_static_rows(self, batch: list[SimJob]) -> tuple[np.ndarray, np.ndarray]:
+        """Uncached (net, dtc) rows, vectorized over the dense WAN-link
+        matrices."""
         S = len(self._names_sorted)
         o = np.asarray([self._site_idx[sj.origin_site] for sj in batch])
         net = (self._loss[o, :] / self._bw[o, :]) * 1.0e6
@@ -426,7 +528,7 @@ class GridSim:
             free = [s for s in self.sites.values() if s.busy < s.nodes]
             if not free:
                 return
-            cj = self.central_fifo.pop(0)
+            cj = self.central_fifo.popleft()
             site = free[0]
             self._cj2sj[cj.job_id].exec_site = site.name
             self._start(site, cj, now, events)
@@ -442,36 +544,213 @@ class GridSim:
             self._dispatch(site_name, now, events)
 
     def _on_migrate_check(self, now: float, events: list) -> None:
-        """§IX/§X: congested sites push Q4 jobs to cheaper peers."""
+        """§IX/§X: congested sites push Q4 jobs to cheaper peers.
+
+        The batched engine evaluates each congested site's whole Q4
+        candidate set as one (J, S) matrix pass; sites are still visited
+        in sequence (an import mutates the target's queue, congestion
+        window and Q4 membership, so a later site's candidate set
+        genuinely depends on earlier sites' moves — a global upfront
+        collection could not stay bit-identical)."""
+        batched = (
+            self.batch_migration
+            and self.policy == "diana"
+            and self._link_matrices_ready()
+        )
+        if not batched:
+            for name, site in self.sites.items():
+                if site.use_mlfq and site.mlfq.congested(self.congestion_window_s, now):
+                    self._migrate_site_sequential(name, site, now, events)
+            return
+        self._mig_prio_cache.clear()
+        sp: Optional[SitePack] = None
+        idx = self._site_idx
         for name, site in self.sites.items():
             if not site.use_mlfq:
                 continue
             if not site.mlfq.congested(self.congestion_window_s, now):
                 continue
-            for cj in list(site.mlfq.low_priority_jobs()):
-                sj = self._cj2sj[cj.job_id]
-                peers = [
-                    PeerView(
-                        name=p,
-                        queue_length=self.sites[p].queue_len(),
-                        jobs_ahead=self.sites[p].mlfq.jobs_ahead(cj.priority),
-                        total_cost=self.placement_cost(sj, p),
-                    )
-                    for p in self.sites
-                    if p != name
-                ]
-                decision = select_peer(
-                    cj, name,
-                    site.mlfq.jobs_ahead(cj.priority),
-                    self.placement_cost(sj, name),
-                    peers,
+            cands = list(site.mlfq.low_priority_jobs())
+            if not cands:
+                continue
+            sjs = [self._cj2sj[cj.job_id] for cj in cands]
+            if sp is None:
+                sp = self._site_pack()
+            if not all(
+                sj.origin_site in idx
+                and (sj.data_site is None or sj.data_site in idx)
+                for sj in sjs
+            ):
+                # Off-grid endpoints (e.g. a storage element) can't use
+                # the dense planes — fall back per job for this site and
+                # resync the packed state it mutated.
+                touched = self._migrate_site_sequential(name, site, now, events)
+                self._resync_pack(sp, touched)
+                continue
+            self._migrate_site_batched(name, site, cands, sjs, sp, now, events)
+
+    def _migrate_site_sequential(
+        self, name: str, site: _Site, now: float, events: list
+    ) -> set[str]:
+        """The per-job §IX reference loop for one congested site.
+        Returns the sites whose queues it mutated."""
+        touched: set[str] = set()
+        for cj in list(site.mlfq.low_priority_jobs()):
+            sj = self._cj2sj[cj.job_id]
+            peers = [
+                PeerView(
+                    name=p,
+                    queue_length=self.sites[p].queue_len(),
+                    jobs_ahead=self.sites[p].mlfq.jobs_ahead(cj.priority),
+                    total_cost=self.placement_cost(sj, p),
                 )
-                if decision.migrate and decision.target:
-                    site.mlfq.remove(cj)
-                    apply_migration(cj, decision)
-                    sj.migrated = True
-                    sj.exec_site = decision.target
-                    self._bucket(name, "exported", now)
-                    self._bucket(decision.target, "imported", now)
-                    self.sites[decision.target].enqueue(cj, now)
-                    self._dispatch(decision.target, now, events)
+                for p in self.sites
+                if p != name
+            ]
+            decision = select_peer(
+                cj, name,
+                site.mlfq.jobs_ahead(cj.priority),
+                self.placement_cost(sj, name),
+                peers,
+            )
+            if decision.migrate and decision.target:
+                self._apply_migration_decision(name, site, cj, sj, decision, now, events)
+                touched.update((name, decision.target))
+        return touched
+
+    def _apply_migration_decision(
+        self,
+        name: str,
+        site: _Site,
+        cj: Job,
+        sj: SimJob,
+        decision,
+        now: float,
+        events: list,
+    ) -> None:
+        """Commit one §IX move: export bookkeeping, enqueue at the
+        target (which §X-reprioritizes it), dispatch."""
+        site.mlfq.remove(cj)
+        apply_migration(cj, decision)
+        sj.migrated = True
+        sj.exec_site = decision.target
+        self._bucket(name, "exported", now)
+        self._bucket(decision.target, "imported", now)
+        self.sites[decision.target].enqueue(cj, now)
+        self._dispatch(decision.target, now, events)
+
+    # -- batched §IX machinery ------------------------------------------------
+    def _site_pack(self) -> SitePack:
+        """Reused dense site-state pack (sorted-name columns). Built
+        once; afterwards only the dynamic columns are re-read."""
+        states = {n: self.sites[n].state() for n in self._names_sorted}
+        if self._sp is None:
+            links = {n: NetworkLink(bandwidth_Bps=1.0) for n in self._names_sorted}
+            self._sp = SitePack.from_scheduler(states, links, order=self._names_sorted)
+        else:
+            self._sp.refresh_dynamic(states)
+        return self._sp
+
+    def _resync_pack(self, sp: SitePack, touched: set[str]) -> None:
+        """Re-read the packed dynamic columns (and drop cached priority
+        arrays) for sites whose queues just changed."""
+        if not touched:
+            return
+        for tn in touched:
+            self._mig_prio_cache.pop(tn, None)
+        sp.refresh_dynamic(
+            {tn: self.sites[tn].state() for tn in touched}, only=list(touched)
+        )
+
+    def _sorted_priorities(self, name: str) -> np.ndarray:
+        """Ascending priority array of one site's queued jobs, cached
+        per migration tick (invalidated for sites a move touches)."""
+        arr = self._mig_prio_cache.get(name)
+        if arr is None:
+            arr = np.sort(
+                np.asarray(
+                    [j.priority for j in self.sites[name].mlfq.jobs], np.float64
+                )
+            )
+            self._mig_prio_cache[name] = arr
+        return arr
+
+    def _jobs_ahead_column(self, name: str, cand_p: np.ndarray) -> np.ndarray:
+        """Vectorized ``mlfq.jobs_ahead``: count of queued jobs at
+        ``name`` with priority ≥ each candidate's priority."""
+        spr = self._sorted_priorities(name)
+        return len(spr) - np.searchsorted(spr, cand_p, side="left")
+
+    def _migrate_site_batched(
+        self,
+        name: str,
+        site: _Site,
+        cands: list[Job],
+        sjs: list[SimJob],
+        sp: SitePack,
+        now: float,
+        events: list,
+    ) -> None:
+        """One congested site's §IX pass as a matrix program.
+
+        All candidate × peer placement costs come from the memoized
+        static (net, dtc) planes plus one dynamic computation column
+        read from the reused SitePack; jobsAhead is a searchsorted per
+        peer column. Decisions are taken by ``select_peers_batch`` and
+        applied in candidate order; an applied move mutates exactly two
+        sites (source and target), so only those two columns are
+        re-read and the remaining rows re-decided — every decision is
+        bit-identical to the sequential per-job loop."""
+        R = len(cands)
+        perm = self._dict_perm
+        names = self._dict_names
+        local_col = self._dict_pos[name]
+        jp = JobPack.from_jobs(cands)
+        work = jp.work                      # == [sj.work for sj in sjs]
+        cand_p = np.asarray([cj.priority for cj in cands], np.float64)
+        net, dtc = self._static_cost_rows(sjs)
+        net_d, dtc_d = net[:, perm], dtc[:, perm]
+        cap_d = sp.cap[perm]
+        comp_d = comp_site_column(sp, self.weights)[perm]
+        # placement_cost's exact op order: (net + (comp_site + w/cap)) + dtc
+        cost = (net_d + (comp_d[None, :] + work[:, None] / cap_d[None, :])) + dtc_d
+        ja = np.empty((R, len(names)))
+        for s, pname in enumerate(names):
+            ja[:, s] = self._jobs_ahead_column(pname, cand_p)
+        pinned = np.asarray([cj.migrated for cj in cands], bool)
+        excluded = np.asarray([n == name for n in names])
+        migrate, best = select_peer_targets(
+            pinned, ja[:, local_col], cost[:, local_col], excluded, ja, cost
+        )
+        i = 0
+        while i < R:
+            rel = np.flatnonzero(migrate[i:])
+            if rel.size == 0:
+                break
+            i += int(rel[0])
+            c = int(best[i])
+            target = names[c]
+            d = MigrationDecision(
+                True, target=target,
+                reason="peer has fewer jobs ahead at lower cost"
+                if cost[i, c] <= cost[i, local_col]
+                else "peer has fewer jobs ahead",
+            )
+            self._apply_migration_decision(name, site, cands[i], sjs[i], d, now, events)
+            # The move touched exactly {source, target}: re-read those
+            # two columns and re-decide the remaining candidates.
+            self._resync_pack(sp, {name, target})
+            i += 1
+            if i >= R:
+                break
+            comp = comp_site_column(sp, self.weights)
+            for tn in (name, target):
+                c = self._dict_pos[tn]
+                sc = self._site_idx[tn]
+                cost[:, c] = (net[:, sc] + (comp[sc] + work / sp.cap[sc])) + dtc[:, sc]
+                ja[:, c] = self._jobs_ahead_column(tn, cand_p)
+            rest = slice(i, R)
+            migrate[rest], best[rest] = select_peer_targets(
+                pinned[rest], ja[rest, local_col], cost[rest, local_col],
+                excluded, ja[rest], cost[rest],
+            )

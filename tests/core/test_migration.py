@@ -106,3 +106,107 @@ class TestCongestionMigration:
             window=30.0, now=20.0, max_moves=2,
         )
         assert len(moved) <= 2
+
+
+class TestSelectPeersBatch:
+    """Vectorized §IX selection must replicate select_peer row by row —
+    targets, migrate flags, and reason strings, tie-breaks included."""
+
+    def _grid(self, jobs_ahead_rows, cost_rows, names):
+        import numpy as np
+
+        return np.asarray(jobs_ahead_rows, float), np.asarray(cost_rows, float), names
+
+    def _assert_rows_match(self, jobs, local, lja, lcost, names, ja, cost,
+                           alive=None):
+        from repro.core import select_peers_batch
+
+        batch = select_peers_batch(jobs, local, lja, lcost, names, ja, cost,
+                                   alive=alive)
+        for r, job in enumerate(jobs):
+            peers = [
+                PeerView(name=n, queue_length=int(ja[r][s]),
+                         jobs_ahead=int(ja[r][s]), total_cost=cost[r][s],
+                         alive=bool(alive[s]) if alive is not None else True)
+                for s, n in enumerate(names)
+            ]
+            ref = select_peer(job, local, lja[r], lcost[r], peers)
+            assert batch[r].migrate == ref.migrate, r
+            assert batch[r].target == ref.target, r
+            assert batch[r].reason == ref.reason, r
+
+    def test_jobs_ahead_tie_broken_by_cost(self):
+        ja, cost, names = self._grid([[2, 2, 5]], [[3.0, 1.0, 0.5]],
+                                     ["a", "b", "c"])
+        self._assert_rows_match([Job(user="u")], "local", [9], [10.0],
+                                names, ja, cost)
+
+    def test_full_tie_keeps_first_peer_in_order(self):
+        """Equal (jobsAhead, cost) everywhere: the stable min keeps the
+        first peer in iteration order — so must argmin."""
+        ja, cost, names = self._grid([[1, 1, 1]], [[2.0, 2.0, 2.0]],
+                                     ["z", "m", "a"])  # NOT sorted order
+        self._assert_rows_match([Job(user="u")], "local", [5], [9.0],
+                                names, ja, cost)
+
+    def test_local_column_excluded(self):
+        """A column named like the local site is never a target, even
+        when it is the cheapest."""
+        ja, cost, names = self._grid([[0, 3]], [[0.0, 1.0]], ["local", "b"])
+        self._assert_rows_match([Job(user="u")], "local", [4], [5.0],
+                                names, ja, cost)
+
+    def test_pinned_and_no_peer_reasons(self):
+        import numpy as np
+
+        ja, cost, names = self._grid([[1], [1]], [[1.0], [1.0]], ["a"])
+        jobs = [Job(user="u", migrated=True), Job(user="v")]
+        self._assert_rows_match(jobs, "local", [5, 5], [9.0, 9.0],
+                                names, ja, cost)
+        # all peers dead → 'no alive peers' (after the pinned check)
+        self._assert_rows_match(jobs, "local", [5, 5], [9.0, 9.0],
+                                names, ja, cost, alive=np.asarray([False]))
+
+    def test_fuzz_matches_select_peer(self):
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        names = [f"p{i}" for i in range(6)]
+        for trial in range(50):
+            J = int(rng.integers(1, 8))
+            # small int ranges force frequent (jobsAhead, cost) ties
+            ja = rng.integers(0, 4, size=(J, 6)).astype(float)
+            cost = rng.integers(0, 3, size=(J, 6)).astype(float)
+            alive = rng.uniform(size=6) > 0.2
+            jobs = [Job(user="u", migrated=bool(rng.uniform() < 0.2))
+                    for _ in range(J)]
+            lja = rng.integers(0, 5, size=J)
+            lcost = rng.integers(0, 3, size=J).astype(float)
+            self._assert_rows_match(jobs, "p0", lja, lcost, names, ja, cost,
+                                    alive=alive)
+
+    def test_targets_agree_with_decisions(self):
+        """The array core (select_peer_targets) and the decision-object
+        API pick the same rows and columns."""
+        import numpy as np
+
+        from repro.core import select_peers_batch
+        from repro.core.migration import select_peer_targets
+
+        rng = np.random.default_rng(1)
+        names = [f"p{i}" for i in range(5)]
+        ja = rng.integers(0, 4, size=(10, 5)).astype(float)
+        cost = rng.integers(0, 3, size=(10, 5)).astype(float)
+        jobs = [Job(user="u", migrated=bool(rng.uniform() < 0.2))
+                for _ in range(10)]
+        lja = rng.integers(0, 5, size=10)
+        lcost = rng.integers(0, 3, size=10).astype(float)
+        decisions = select_peers_batch(jobs, "p2", lja, lcost, names, ja, cost)
+        pinned = np.asarray([j.migrated for j in jobs])
+        excluded = np.asarray([n == "p2" for n in names])
+        migrate, best = select_peer_targets(pinned, lja, lcost, excluded,
+                                            ja, cost)
+        for r, d in enumerate(decisions):
+            assert d.migrate == bool(migrate[r]), r
+            if d.migrate:
+                assert d.target == names[best[r]], r

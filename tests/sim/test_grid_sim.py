@@ -211,6 +211,36 @@ class TestArrivalBatchFastPath:
         assert [j.exec_site for j in bat.jobs] == [j.exec_site for j in seq.jobs]
         assert [j.finish for j in bat.jobs] == [j.finish for j in seq.jobs]
 
+    def test_assigning_links_invalidates_static_cache(self):
+        """The memoized (net, dtc) rows derive from the link table —
+        assigning a new table must drop them and the dense matrices."""
+        sim = GridSim(paper_grid_spec(), policy="diana")
+        jobs = bulk_burst("u", 5, at=0.0, work=5.0, input_bytes=1e9,
+                          data_site="site3", origin_site="site1")
+        sim.choose_sites_batch(jobs)
+        assert sim._static_row_cache
+        sim.links = uniform_links(list(paper_grid_spec()), bandwidth_Bps=1e7)
+        assert not sim._static_row_cache
+        assert sim._loss is None
+        # and the rows re-derive from the new table
+        sim.choose_sites_batch(jobs)
+        assert sim._static_row_cache
+
+    def test_full_link_table_reenables_disabled_fast_path(self):
+        """A partial table disables batch arrivals; assigning a complete
+        table afterwards restores the requested fast path."""
+        names = list(paper_grid_spec())
+        partial = {k: v for k, v in uniform_links(names).items()
+                   if "site1" in k or k[0] == k[1]}
+        sim = GridSim(paper_grid_spec(), policy="diana", links=partial,
+                      batch_arrivals=True)
+        assert not sim._link_matrices_ready()
+        assert sim.batch_arrivals is False
+        assert not sim._link_matrices_ready()  # cached failure, no rescan
+        sim.links = uniform_links(names)
+        assert sim.batch_arrivals is True
+        assert sim._link_matrices_ready()
+
     def test_partial_link_table_falls_back_to_sequential(self):
         """A link dict covering only the pairs the sequential path
         traverses can't be densified — the fast path must disable
@@ -230,3 +260,89 @@ class TestArrivalBatchFastPath:
                       batch_arrivals=False).run(copy.deepcopy(jobs))
         assert all(j.finish >= 0 for j in res.jobs)
         assert [j.exec_site for j in res.jobs] == [j.exec_site for j in seq.jobs]
+
+
+class TestBatchedMigration:
+    """The batched §IX/§X migration pass must be bit-identical to the
+    sequential per-job loop: same targets, same export/import buckets,
+    same final assignments and finish times."""
+
+    def _compare(self, jobs, nodes=None, **kw):
+        nodes = nodes or paper_grid_spec()
+        kw.setdefault("quotas", QUOTAS)
+        kw.setdefault("migration_interval_s", 30.0)
+        kw.setdefault("congestion_window_s", 120.0)
+        seq = GridSim(nodes, policy="diana", batch_migration=False,
+                      **kw).run(copy.deepcopy(jobs))
+        bat = GridSim(nodes, policy="diana", batch_migration=True,
+                      **kw).run(copy.deepcopy(jobs))
+        assert [j.exec_site for j in seq.jobs] == [j.exec_site for j in bat.jobs]
+        assert [j.migrated for j in seq.jobs] == [j.migrated for j in bat.jobs]
+        assert [j.start for j in seq.jobs] == [j.start for j in bat.jobs]
+        assert [j.finish for j in seq.jobs] == [j.finish for j in bat.jobs]
+        assert seq.timeline == bat.timeline
+        return seq, bat
+
+    def test_overload_equivalence(self):
+        seq, bat = self._compare(_overload_workload())
+        assert bat.migrations() > 0  # the comparison actually migrated
+
+    def test_big_site_tiebreak_equivalence(self):
+        """'big' sorts first but iterates last: peer tie-breaking must
+        follow sites-dict order, not sorted-column order."""
+        seq, bat = self._compare(_overload_workload(),
+                                 nodes=dict(paper_grid_spec(), big=50))
+        assert bat.migrations() > 0
+
+    @pytest.mark.parametrize("seed", [1, 2, 3])
+    def test_seeded_random_workloads(self, seed):
+        """Mixed origins/data sites exercise the pair-structured static
+        planes and the per-signature row cache across seeds."""
+        rng = np.random.default_rng(seed)
+        sites = list(paper_grid_spec())
+        jobs = []
+        for b in range(8):
+            jobs.extend(
+                bulk_burst("hog", 25, at=float(b * 25),
+                           work=float(rng.uniform(100, 400)),
+                           input_bytes=float(rng.uniform(0, 3e9)),
+                           output_bytes=float(rng.uniform(0, 3e8)),
+                           data_site=sites[int(rng.integers(len(sites)))],
+                           origin_site=sites[int(rng.integers(len(sites)))],
+                           rng=rng, work_jitter=0.2)
+            )
+        for i in range(30):
+            jobs.extend(
+                bulk_burst("polite", 1, at=float(i * 15), work=200.0,
+                           input_bytes=1e9,
+                           data_site=sites[int(rng.integers(len(sites)))],
+                           origin_site=sites[int(rng.integers(len(sites)))])
+            )
+        seq, bat = self._compare(sorted(jobs, key=lambda j: j.arrival))
+        assert all(j.finish >= 0 for j in bat.jobs)
+
+    def test_off_grid_endpoints_fall_back_per_site(self):
+        """Candidates whose data lives on a link-table-only storage
+        node route through the per-job fallback for that site — still
+        identical to the fully sequential pass."""
+        names = ["site1", "site2", "site3"]
+        links = uniform_links(names + ["storage"])
+        nodes = {n: 2 for n in names}
+        jobs = []
+        for b in range(6):
+            jobs.extend(
+                bulk_burst("hog", 12, at=float(b * 30), work=300.0,
+                           input_bytes=2e9, data_site="storage",
+                           origin_site="site1")
+            )
+        for i in range(10):
+            jobs.extend(
+                bulk_burst("polite", 1, at=float(i * 20), work=300.0,
+                           input_bytes=2e9, data_site="storage",
+                           origin_site="site1")
+            )
+        jobs = sorted(jobs, key=lambda j: j.arrival)
+        self._compare(jobs, nodes=nodes, links=links)
+
+    def test_batched_is_default(self):
+        assert GridSim(paper_grid_spec(), policy="diana").batch_migration
