@@ -1,0 +1,173 @@
+"""BENCH: decentralized P2P scheduling vs the omniscient baseline.
+
+Runs the same compute-bound workload through the single-scheduler
+``GridSim`` (perfect global state) and through ``P2PGridSim`` at
+several exchange intervals, and reports the two costs of
+decentralization (paper §III/§IX):
+
+* placement-quality degradation — makespan (and turnaround) relative
+  to the omniscient scheduler, growing with view staleness;
+* exchange cost — advertised rows / bytes on the wire, shrinking with
+  the exchange interval.
+
+The workload is queue-dominated (no data gravity) on a
+capacity-heterogeneous grid, so placement quality hinges on how fresh
+each peer's view of the remote queues is — the quantity the exchange
+protocol trades messages for.
+
+    PYTHONPATH=src python benchmarks/p2p_bench.py [--sites N] [--peers P]
+        [--jobs J] [--intervals 30,120,480]
+
+The full-size run (256 sites) writes ``BENCH_p2p.json`` at the repo
+root; ``--smoke`` (CI: 16 sites x 3 peers x 200 jobs) skips the file
+and instead asserts the single-peer/zero-staleness special case is
+bit-identical to the omniscient scheduler.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.sim import GridSim, P2PGridSim, bulk_burst
+
+try:
+    from .common import emit
+except ImportError:                       # run as a script
+    from common import emit
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _grid(sites: int) -> dict[str, int]:
+    """Capacity-heterogeneous nodes (2/4/8) so queue state matters."""
+    return {f"s{i:03d}": (2, 4, 8)[i % 3] for i in range(sites)}
+
+
+def _workload(names: list[str], jobs: int, seed: int = 0):
+    """Compute-bound bursts from random origins: no data gravity, so
+    placement quality is purely a function of queue-state freshness."""
+    rng = np.random.default_rng(seed)
+    out = []
+    burst = 4
+    for i in range(max(1, jobs // burst)):
+        origin = names[int(rng.integers(len(names)))]
+        out.extend(
+            bulk_burst(f"u{i % 16}", burst, at=float(i * 3), work=200.0,
+                       input_bytes=0.0, output_bytes=0.0, data_site=None,
+                       origin_site=origin, rng=rng, work_jitter=0.3)
+        )
+    return sorted(out, key=lambda j: j.arrival)
+
+
+def bench(
+    sites: int = 256,
+    peers: int = 8,
+    jobs: int = 4000,
+    intervals: tuple[float, ...] = (30.0, 120.0, 480.0),
+    latency_s: float = 2.0,
+    seed: int = 0,
+) -> dict:
+    nodes = _grid(sites)
+    names = sorted(nodes)
+    workload = _workload(names, jobs, seed)
+
+    t0 = time.perf_counter()
+    base = GridSim(nodes, policy="diana").run(copy.deepcopy(workload))
+    base_s = time.perf_counter() - t0
+    rec: dict = {
+        "bench": "p2p",
+        "sites": sites,
+        "peers": peers,
+        "jobs": len(workload),
+        "exchange_latency_s": latency_s,
+        "baseline": {
+            "makespan": round(base.makespan, 1),
+            "avg_turnaround": round(base.avg_turnaround, 1),
+            "run_s": round(base_s, 2),
+        },
+        "intervals": [],
+    }
+    for iv in intervals:
+        sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=iv,
+                         exchange_latency_s=latency_s)
+        t0 = time.perf_counter()
+        res = sim.run(copy.deepcopy(workload))
+        run_s = time.perf_counter() - t0
+        stats = sim.exchange.stats
+        rec["intervals"].append({
+            "exchange_interval_s": iv,
+            "makespan": round(res.makespan, 1),
+            "makespan_degradation": round(res.makespan / base.makespan, 4),
+            "avg_turnaround": round(res.avg_turnaround, 1),
+            "turnaround_degradation": round(
+                res.avg_turnaround / base.avg_turnaround, 4
+            ),
+            "migrations": res.migrations(),
+            "exchange_rounds": stats.rounds,
+            "adverts_sent": stats.adverts_sent,
+            "bytes_sent": stats.bytes_sent,
+            "run_s": round(run_s, 2),
+        })
+    return rec
+
+
+def smoke(sites: int, peers: int, jobs: int, seed: int = 0) -> dict:
+    """CI smoke: the 1-peer special case must be bit-identical to the
+    omniscient scheduler, and the N-peer run must complete every job."""
+    nodes = _grid(sites)
+    workload = _workload(sorted(nodes), jobs, seed)
+    base = GridSim(nodes, policy="diana").run(copy.deepcopy(workload))
+    one = P2PGridSim(nodes, num_peers=1, exchange_interval_s=60.0).run(
+        copy.deepcopy(workload)
+    )
+    if [j.exec_site for j in base.jobs] != [j.exec_site for j in one.jobs] or [
+        j.finish for j in base.jobs
+    ] != [j.finish for j in one.jobs]:
+        raise AssertionError("single-peer P2P sim diverged from the omniscient GridSim")
+    sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=120.0,
+                     exchange_latency_s=2.0)
+    res = sim.run(copy.deepcopy(workload))
+    if not all(j.finish >= 0 for j in res.jobs):
+        raise AssertionError("p2p run left unfinished jobs")
+    return {
+        "bench": "p2p-smoke", "sites": sites, "peers": peers,
+        "jobs": len(workload),
+        "single_peer_identical": True,
+        "makespan_degradation": round(res.makespan / base.makespan, 4),
+        "adverts_sent": sim.exchange.stats.adverts_sent,
+    }
+
+
+def run() -> dict:
+    """Reduced size for the aggregate harness."""
+    rec = bench(sites=32, peers=4, jobs=800, intervals=(30.0, 120.0, 480.0))
+    worst = max(iv["makespan_degradation"] for iv in rec["intervals"])
+    emit("p2p_makespan_degradation", rec["intervals"][0]["run_s"] * 1e6,
+         f"worst={worst}x over {rec['sites']} sites x {rec['peers']} peers")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sites", type=int, default=256)
+    ap.add_argument("--peers", type=int, default=8)
+    ap.add_argument("--jobs", type=int, default=4000)
+    ap.add_argument("--intervals", type=str, default="30,120,480")
+    ap.add_argument("--latency", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: equivalence assert, no BENCH_p2p.json")
+    args = ap.parse_args()
+    if args.smoke:
+        rec = smoke(args.sites, args.peers, args.jobs, args.seed)
+        print("BENCH " + json.dumps(rec))
+    else:
+        ivs = tuple(float(x) for x in args.intervals.split(","))
+        rec = bench(args.sites, args.peers, args.jobs, ivs, args.latency, args.seed)
+        print("BENCH " + json.dumps(rec))
+        (REPO_ROOT / "BENCH_p2p.json").write_text(json.dumps(rec, indent=2) + "\n")

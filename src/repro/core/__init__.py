@@ -29,6 +29,9 @@ from .bulk import (
     GroupPlacement,
     allocate_proportional,
     average_makespan,
+    route_groups,
+    stable_user_peer,
+    submitting_peer,
 )
 from .migration import (
     MigrationDecision,
@@ -39,13 +42,24 @@ from .migration import (
 )
 from .topology import GridTopology, Node, RootGrid, SubGrid
 from .batch import (
+    PACK_FIELDS,
     BatchPlacement,
     JobPack,
     SitePack,
     batched_argmin,
     batched_cost_matrix,
     cost_components,
+    merge_packed_rows,
+    replay_on_pack,
     replay_place,
+)
+from .engine import PlacementEngine
+from .p2p import (
+    ExchangeStats,
+    GossipExchange,
+    PeerScheduler,
+    SiteAdvert,
+    single_peer,
 )
 
 __all__ = [
@@ -58,9 +72,14 @@ __all__ = [
     "DianaScheduler", "JobClass", "SiteDecision", "classify",
     "BulkGroup", "BulkScheduler", "GroupPlacement",
     "allocate_proportional", "average_makespan",
+    "route_groups", "stable_user_peer", "submitting_peer",
     "MigrationDecision", "PeerView", "migrate_congested", "select_peer",
     "select_peers_batch",
     "GridTopology", "Node", "RootGrid", "SubGrid",
-    "BatchPlacement", "JobPack", "SitePack", "batched_argmin",
-    "batched_cost_matrix", "cost_components", "replay_place",
+    "PACK_FIELDS", "BatchPlacement", "JobPack", "SitePack", "batched_argmin",
+    "batched_cost_matrix", "cost_components", "merge_packed_rows",
+    "replay_on_pack", "replay_place",
+    "PlacementEngine",
+    "ExchangeStats", "GossipExchange", "PeerScheduler", "SiteAdvert",
+    "single_peer",
 ]

@@ -32,6 +32,7 @@ are bit-identical to the per-job loop:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -42,6 +43,7 @@ from .queues import Job
 from .scheduler import JobClass, classify
 
 __all__ = [
+    "PACK_FIELDS",
     "SitePack",
     "JobPack",
     "BatchPlacement",
@@ -51,8 +53,14 @@ __all__ = [
     "cost_components",
     "batched_cost_matrix",
     "batched_argmin",
+    "merge_packed_rows",
+    "replay_on_pack",
     "replay_place",
 ]
+
+# Wire/row order of the packed per-site float columns — the "(8, S)"
+# layout the P2P layer advertises between peers (repro.core.p2p).
+PACK_FIELDS = ("cap", "queue", "work", "load", "bw", "loss", "rtt", "mss")
 
 
 @dataclass
@@ -102,24 +110,67 @@ class SitePack:
         self,
         sites: dict[str, SiteState],
         only: Optional[Sequence[str]] = None,
+        missing: str = "raise",
     ) -> None:
         """Re-read queue/work/load/alive (between replay rounds).
 
         ``only`` restricts the refresh to the named columns — the
         migration pass uses it to touch just the (source, target) pair
-        a move mutated instead of re-reading every site.
+        a move mutated instead of re-reading every site. A name in
+        ``only`` that has no column is a caller bug: ``missing="raise"``
+        (the default) raises ``KeyError`` naming the offenders;
+        ``missing="warn"`` skips them with a warning instead.
         """
+        if missing not in ("raise", "warn"):
+            raise ValueError(f"missing must be 'raise' or 'warn', got {missing!r}")
         if only is None:
             pairs: Sequence[tuple[int, str]] = list(enumerate(self.names))
         else:
             idx = {n: i for i, n in enumerate(self.names)}
-            pairs = [(idx[n], n) for n in only]
+            unknown = [n for n in only if n not in idx]
+            if unknown:
+                if missing == "raise":
+                    raise KeyError(
+                        f"refresh_dynamic: unknown site id(s) in only={unknown!r}; "
+                        f"pack columns are {self.names!r}"
+                    )
+                warnings.warn(
+                    f"refresh_dynamic: ignoring unknown site id(s) {unknown!r}",
+                    stacklevel=2,
+                )
+            pairs = [(idx[n], n) for n in only if n in idx]
         for i, n in pairs:
             s = sites[n]
             self.queue[i] = s.queue_length
             self.work[i] = s.waiting_work
             self.load[i] = s.load
             self.alive[i] = s.alive
+
+    # -- packed-row exchange plumbing (repro.core.p2p wire format) ---------
+    def pack_rows(self, cols: Optional[np.ndarray] = None) -> np.ndarray:
+        """The (8, S) float64 packed view of the per-site columns in
+        ``PACK_FIELDS`` order — the unit the P2P layer advertises. With
+        ``cols`` (k,) returns just those columns, shape (8, k)."""
+        rows = np.stack([getattr(self, f) for f in PACK_FIELDS])
+        return rows if cols is None else rows[:, cols]
+
+    def set_columns(
+        self,
+        cols: np.ndarray,
+        rows: np.ndarray,
+        alive: Optional[np.ndarray] = None,
+        fields: Optional[Sequence[str]] = None,
+    ) -> None:
+        """Write (8, k) packed ``rows`` (PACK_FIELDS order) into columns
+        ``cols``; ``alive`` optionally overwrites the liveness bits.
+        ``fields`` restricts the write to a subset of ``PACK_FIELDS``
+        (the P2P merge keeps the receiver's own path measurements)."""
+        rows = np.asarray(rows, np.float64)
+        for r, f in enumerate(PACK_FIELDS):
+            if fields is None or f in fields:
+                getattr(self, f)[cols] = rows[r]
+        if alive is not None:
+            self.alive[cols] = np.asarray(alive, bool)
 
 
 
@@ -303,28 +354,94 @@ def batched_argmin(cost: np.ndarray, sites: SitePack) -> BatchPlacement:
 
 
 # ---------------------------------------------------------------------------
+# Row-versioned merge of advertised columns (P2P world-view refresh).
+# ---------------------------------------------------------------------------
+
+def merge_packed_rows(
+    sp: SitePack,
+    version: np.ndarray,
+    stamp: np.ndarray,
+    cols: np.ndarray,
+    rows: np.ndarray,
+    new_version: np.ndarray,
+    new_stamp: np.ndarray,
+    alive: Optional[np.ndarray] = None,
+    protect: Optional[np.ndarray] = None,
+    fields: Optional[Sequence[str]] = None,
+) -> np.ndarray:
+    """Merge advertised (8, k) ``rows`` into pack columns ``cols``,
+    keeping only strictly newer epochs.
+
+    ``version``/``stamp`` are the receiver's (S,) per-column epoch and
+    owner-clock vectors, updated in place for the applied columns.
+    ``protect`` marks columns the receiver owns authoritatively (its
+    home sites) — hearsay never overwrites those. ``fields`` restricts
+    which packed fields an applied column overwrites (see
+    ``SitePack.set_columns``). Returns the (k,) bool mask of applied
+    columns.
+    """
+    cols = np.asarray(cols, np.int64)
+    new_version = np.asarray(new_version, np.int64)
+    if len(np.unique(cols)) != len(cols):
+        # Duplicate columns in one batch (adverts aggregated from
+        # several senders): fancy assignment is last-write-wins, which
+        # could roll a newer epoch back to an older duplicate. Keep
+        # only the highest epoch per column; the losers report False.
+        winner: dict[int, int] = {}
+        for k, c in enumerate(cols):
+            if c not in winner or new_version[k] > new_version[winner[c]]:
+                winner[c] = int(k)
+        keep = np.zeros(len(cols), bool)
+        keep[list(winner.values())] = True
+        out = np.zeros(len(cols), bool)
+        out[keep] = merge_packed_rows(
+            sp, version, stamp, cols[keep],
+            np.asarray(rows, np.float64)[:, keep],
+            new_version[keep],
+            np.asarray(new_stamp, np.float64)[keep],
+            None if alive is None else np.asarray(alive, bool)[keep],
+            protect,
+            fields,
+        )
+        return out
+    newer = new_version > version[cols]
+    if protect is not None:
+        newer &= ~np.asarray(protect, bool)[cols]
+    if newer.any():
+        take = cols[newer]
+        sp.set_columns(
+            take,
+            np.asarray(rows, np.float64)[:, newer],
+            None if alive is None else np.asarray(alive, bool)[newer],
+            fields,
+        )
+        version[take] = np.asarray(new_version, np.int64)[newer]
+        stamp[take] = np.asarray(new_stamp, np.float64)[newer]
+    return newer
+
+
+# ---------------------------------------------------------------------------
 # Sequential-equivalent replay: commit placements between matrix rows.
 # ---------------------------------------------------------------------------
 
-def replay_place(
-    jobs: Sequence[Job],
-    sites: dict[str, SiteState],
-    links: dict[str, NetworkLink],
+def replay_on_pack(
+    jp: JobPack,
+    sp: SitePack,
     weights: CostWeights = CostWeights(),
-    job_classes: Optional[Sequence[Optional[JobClass]]] = None,
-    commit: bool = True,
 ) -> BatchPlacement:
-    """Batched equivalent of ``[DianaScheduler.place(j) for j in jobs]``.
+    """The replay core against any ``SitePack`` view — fresh or stale.
 
     The static planes (network + data-transfer, the expensive §IV
     terms) are evaluated once for the whole batch; between rows only
     the computation term is re-derived from the running queue-length /
     waiting-work vectors — the vectorized replay of "after every job we
-    calculate the cost to submit the next job". Site choices, costs and
-    final site state are bit-identical to the sequential loop.
+    calculate the cost to submit the next job". The pack's queue/work
+    columns are updated in place with the per-placement feedback, so a
+    caller holding authoritative state (``replay_place``) or a stale
+    world view (``repro.core.p2p.PeerScheduler``) commits from the
+    same arrays. Site choices and costs are bit-identical to the
+    sequential per-job loop over the same view.
     """
-    sp = SitePack.from_scheduler(sites, links)
-    jp = JobPack.from_jobs(jobs, job_classes)
     net, comp_base, dtc = cost_components(jp, sp, weights)
     comp_base = comp_base.copy()
     dead = ~sp.alive
@@ -340,7 +457,7 @@ def replay_place(
     load_term = weights.w_load * sp.load
     cap = sp.cap
 
-    J = len(jobs)
+    J = len(jp.classes)
     site_idx = np.empty(J, np.int64)
     costs = np.empty(J, np.float64)
     for j in range(J):
@@ -357,16 +474,40 @@ def replay_place(
         # full recomputation.
         comp_base[s] = (wq * q[s] / cap[s] + ww * w[s] / cap[s]) + load_term[s]
 
-    names = [sp.names[i] for i in site_idx]
+    sp.queue[:] = q
+    sp.work[:] = w
+    return BatchPlacement(
+        site_indices=site_idx,
+        sites=[sp.names[i] for i in site_idx],
+        costs=costs,
+        classes=jp.classes,
+    )
+
+
+def replay_place(
+    jobs: Sequence[Job],
+    sites: dict[str, SiteState],
+    links: dict[str, NetworkLink],
+    weights: CostWeights = CostWeights(),
+    job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+    commit: bool = True,
+) -> BatchPlacement:
+    """Batched equivalent of ``[DianaScheduler.place(j) for j in jobs]``.
+
+    Packs the authoritative dicts, runs ``replay_on_pack`` and commits
+    the resulting queue/work vectors back — site choices, costs and
+    final site state are bit-identical to the sequential loop.
+    """
+    sp = SitePack.from_scheduler(sites, links)
+    jp = JobPack.from_jobs(jobs, job_classes)
+    placement = replay_on_pack(jp, sp, weights)
     if commit:
-        for job, name in zip(jobs, names):
+        for job, name in zip(jobs, placement.sites):
             job.site = name
         for i, name in enumerate(sp.names):
-            sites[name].queue_length = float(q[i])
-            sites[name].waiting_work = float(w[i])
-    return BatchPlacement(
-        site_indices=site_idx, sites=names, costs=costs, classes=jp.classes
-    )
+            sites[name].queue_length = float(sp.queue[i])
+            sites[name].waiting_work = float(sp.work[i])
+    return placement
 
 
 # Resolve scheduler's lazy "BatchPlacement" return annotations at runtime

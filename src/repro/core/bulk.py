@@ -20,6 +20,7 @@ per-site makespans of 16.6 h (1 group), 10 h (2) and 8.5 h (10).
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -34,6 +35,9 @@ __all__ = [
     "allocate_proportional",
     "average_makespan",
     "BulkScheduler",
+    "stable_user_peer",
+    "submitting_peer",
+    "route_groups",
 ]
 
 
@@ -46,6 +50,7 @@ class BulkGroup:
     group_id: str
     division_factor: int = 1          # VO-set number of subgroups when splitting
     output_location: str = "user"     # where results aggregate
+    submit_site: Optional[str] = None  # where the submission enters the grid
 
     def __post_init__(self) -> None:
         for j in self.jobs:
@@ -243,3 +248,56 @@ class BulkScheduler:
         for site, jobs in placement.assignments.items():
             moved[site] = sum(j.output_bytes for j in jobs)
         return moved
+
+
+# ---------------------------------------------------------------------------
+# Decentralized routing: each group goes to its submitting peer (§III).
+# ---------------------------------------------------------------------------
+
+def stable_user_peer(user: str, peers: Sequence):
+    """Deterministic user→peer routing for submissions with no (or an
+    unknown) submit site — crc32, not ``hash()``, so routing survives
+    interpreter hash randomization. The single source of this rule:
+    ``submitting_peer`` (groups) and the P2P simulator's job routing
+    both call it, so they can never diverge for the same user."""
+    if not peers:
+        raise ValueError("no peers to route to")
+    return peers[zlib.crc32(user.encode()) % len(peers)]
+
+
+def submitting_peer(group: BulkGroup, peers: Sequence):
+    """The peer a bulk submission enters the grid through.
+
+    In the decentralized deployment a user's group is submitted at
+    their site (``group.submit_site``) and that site's ``PeerScheduler``
+    places it from its own world view. A group with no (or unknown)
+    submit site falls back to ``stable_user_peer``. ``peers`` is any
+    sequence of objects with ``home_sites``/``home`` (duck-typed to
+    avoid a bulk→p2p import cycle).
+    """
+    if group.submit_site is not None:
+        for p in peers:
+            if group.submit_site in p.home_sites:
+                return p
+    return stable_user_peer(group.user, peers)
+
+
+def route_groups(
+    groups: Sequence[BulkGroup],
+    peers: Sequence,
+    max_group_fraction: float = 1.0,
+    now: Optional[float] = None,
+) -> list[tuple[object, GroupPlacement]]:
+    """Route each §VIII group to its submitting peer and place it there.
+
+    Returns (peer, placement) per group, in submission order — the
+    decentralized counterpart of ``BulkScheduler.schedule_groups``
+    (each peer sees only its own world view, so two peers may place
+    overlapping groups optimistically; owning sites reconcile by
+    queueing, exactly like per-job placement).
+    """
+    out = []
+    for g in groups:
+        p = submitting_peer(g, peers)
+        out.append((p, p.schedule_group(g, max_group_fraction, now=now)))
+    return out

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -72,12 +73,15 @@ class SiteState:
     waiting_work: float = 0.0        # Q  — aggregate queued work (proc·hours or FLOPs)
     load: float = 0.0                # SiteLoad in [0, 1]
     alive: bool = True
-    free_slots: float = field(default=0.0)  # currently idle processors
+    # Currently idle processors; None (unspecified) defaults to an idle
+    # site. An explicit 0.0 means saturated and must stay 0.0 — the P2P
+    # layer advertises this value grid-wide.
+    free_slots: Optional[float] = field(default=None)
 
     def __post_init__(self) -> None:
         if self.capacity <= 0:
             raise ValueError(f"site {self.name}: capacity must be > 0")
-        if not self.free_slots:
+        if self.free_slots is None:
             self.free_slots = self.capacity
 
 

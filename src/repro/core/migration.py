@@ -24,6 +24,7 @@ __all__ = [
     "select_peer",
     "select_peer_targets",
     "select_peers_batch",
+    "staleness_excluded",
     "migrate_congested",
 ]
 
@@ -93,6 +94,19 @@ def _peer_argmin(
     return ja_min, best, cost[rows, best]
 
 
+def staleness_excluded(
+    excluded: np.ndarray,
+    staleness: Optional[np.ndarray],
+    max_staleness: float,
+) -> np.ndarray:
+    """Fold per-column view staleness into the exclusion mask: §IX
+    migration only trusts peers whose advertised rows are fresh enough
+    (a P2P peer's world view ages between exchange rounds)."""
+    if staleness is None:
+        return excluded
+    return excluded | (np.asarray(staleness, np.float64) > max_staleness)
+
+
 def select_peer_targets(
     pinned: np.ndarray,
     local_jobs_ahead: np.ndarray,
@@ -100,12 +114,31 @@ def select_peer_targets(
     excluded: np.ndarray,
     jobs_ahead: np.ndarray,
     total_cost: np.ndarray,
+    staleness: Optional[np.ndarray] = None,
+    max_staleness: float = float("inf"),
 ) -> tuple[np.ndarray, np.ndarray]:
     """Array core of ``select_peers_batch``: (migrate (J,) bool, best
     column (J,) int). No per-row Python — the migration hot loop uses
     this and materializes ``MigrationDecision`` objects only for rows
-    it actually applies. ``excluded`` marks dead/local columns."""
-    J = np.asarray(total_cost).shape[0]
+    it actually applies. ``excluded`` marks dead/local columns;
+    ``staleness`` (S,) additionally drops columns older than
+    ``max_staleness`` seconds (P2P world-view trust)."""
+    tc = np.asarray(total_cost, np.float64)
+    # J comes from the row count when the plane is 2-D: a (J, 0) plane
+    # (jobs but no peers) must still yield (J,) no-migrate rows; only a
+    # genuinely empty candidate set yields length-0 arrays. A non-empty
+    # 1-D input is a caller shape bug (a single job's row missing its
+    # [None, :] lift) and must fail loudly, not drop its decisions.
+    if tc.ndim != 2:
+        if tc.size == 0:
+            return np.zeros(0, bool), np.zeros(0, np.int64)
+        raise ValueError(
+            f"total_cost must be a (J, S) plane, got shape {tc.shape}"
+        )
+    J = tc.shape[0]
+    if J == 0:
+        return np.zeros(0, bool), np.zeros(0, np.int64)
+    excluded = staleness_excluded(excluded, staleness, max_staleness)
     if excluded.all():
         return np.zeros(J, bool), np.zeros(J, np.int64)
     ja_min, best, best_cost = _peer_argmin(excluded, jobs_ahead, total_cost)
@@ -128,6 +161,8 @@ def select_peers_batch(
     jobs_ahead: np.ndarray,
     total_cost: np.ndarray,
     alive: Optional[np.ndarray] = None,
+    staleness: Optional[np.ndarray] = None,
+    max_staleness: float = float("inf"),
 ) -> list[MigrationDecision]:
     """Vectorized ``select_peer`` over a (J, S) peer grid.
 
@@ -137,21 +172,38 @@ def select_peers_batch(
     the same order. ``jobs_ahead``/``total_cost`` are (J, S) planes,
     ``local_jobs_ahead``/``local_cost`` the (J,) local columns; a
     column named ``local_name`` (and any dead column) is excluded the
-    way ``select_peer`` drops the local/dead entries. Decisions —
-    targets and reason strings — are identical to
-    ``[select_peer(j, local_name, lja, lc, peers) for ...]``.
+    way ``select_peer`` drops the local/dead entries, and ``staleness``
+    (S,) drops columns whose advertised rows are older than
+    ``max_staleness`` (only sufficiently fresh peers are trusted).
+    An empty candidate set (J=0) returns an empty decision list.
+    Without staleness, decisions — targets and reason strings — are
+    identical to ``[select_peer(j, local_name, lja, lc, peers) ...]``.
     """
-    J, S = np.asarray(total_cost).shape
+    tc = np.asarray(total_cost, np.float64)
+    if tc.ndim != 2:
+        if tc.size == 0 and len(jobs) == 0:
+            return []
+        # Same loud failure as select_peer_targets: a non-empty 1-D
+        # row is a missing [None, :] lift, not an empty candidate set.
+        raise ValueError(f"total_cost must be a (J, S) plane, got shape {tc.shape}")
+    J, S = tc.shape
+    if J == 0:
+        return []
     if alive is None:
         alive = np.ones(S, bool)
     excluded = ~np.asarray(alive, bool) | np.asarray(
-        [n == local_name for n in names]
+        [n == local_name for n in names], bool
     )
+    all_dead = excluded.all()
+    excluded = staleness_excluded(excluded, staleness, max_staleness)
     if excluded.all():
+        # Distinguish "every peer dead/local" (the sequential reason)
+        # from "alive peers exist but none fresh enough" (P2P-only).
+        no_peer = "no alive peers" if all_dead else "no sufficiently fresh peers"
         return [
             MigrationDecision(False, reason="pinned: already migrated once")
             if j.migrated
-            else MigrationDecision(False, reason="no alive peers")
+            else MigrationDecision(False, reason=no_peer)
             for j in jobs
         ]
     ja_min, best, best_cost = _peer_argmin(excluded, jobs_ahead, total_cost)

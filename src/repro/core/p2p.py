@@ -1,0 +1,506 @@
+"""Decentralized P2P meta-scheduling (paper §III/§IX).
+
+DIANA is explicitly a *decentralized* Meta Scheduler: every site runs
+its own scheduler instance, and the P2P layer exchanges cost/queue
+information between peers instead of assuming one omniscient global
+view. This module is that layer:
+
+* ``PeerScheduler`` — one site's DIANA instance. It owns its home
+  site(s)' **authoritative** state and knows the other S−1 sites only
+  through a *world view*: a persistent ``SitePack`` whose remote
+  columns were heard from peers, plus per-column ``version`` (the
+  owner's monotonic epoch) and ``stamp`` (the owner's clock) vectors.
+  Placement runs the pure ``PlacementEngine`` over that view — fresh
+  or stale, the algorithm is identical, so a single peer owning every
+  site (``single_peer``) is bit-identical to
+  ``DianaScheduler.place_batch``.
+* ``SiteAdvert`` — the wire unit: one packed (8,) ``SitePack`` column
+  (``PACK_FIELDS`` order) plus liveness, free slots, epoch and stamp.
+  A full advertisement is one (8, S) float64 array + a version vector,
+  ~90 bytes/site.
+* ``GossipExchange`` — the epoch-advertisement protocol: each round
+  every peer advertises every row it knows (own rows freshly measured,
+  remote rows as hearsay) to its fan-out set; receivers keep only
+  strictly newer epochs (``merge_packed_rows``), so gossip converges
+  and stale hearsay can never roll a row backwards. Fan-out is
+  hierarchy-aware over ``GridTopology``: peers inside one RootGrid
+  tier exchange directly every round (the SubGrid tier), while across
+  RootGrids only each tier's representative talks to the other
+  representatives (the RootGrid tier of Fig 5) — message count scales
+  with tier sizes, not S².
+
+Delivery latency models the WAN: adverts sent at t arrive at
+t+latency, so a receiver's ``staleness`` of a remote row is
+(now − stamp) — the knob Q4 migration uses to decide which peers it
+still trusts (``select_peers_batch(..., staleness=, max_staleness=)``).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .batch import (
+    PACK_FIELDS,
+    JobPack,
+    SitePack,
+    merge_packed_rows,
+)
+from .bulk import BulkGroup, BulkScheduler, GroupPlacement
+from .costs import CostWeights, NetworkLink, SiteState
+from .engine import PlacementEngine
+from .queues import Job
+from .scheduler import DianaScheduler, JobClass
+from .topology import GridTopology
+
+__all__ = [
+    "OWNER_FIELDS",
+    "SiteAdvert",
+    "ExchangeStats",
+    "PeerScheduler",
+    "GossipExchange",
+    "single_peer",
+    "advert_wire_bytes",
+]
+
+# The advertised fields a receiver actually merges. The wire row
+# carries all of PACK_FIELDS, but path quality (bw/loss/rtt/mss) is a
+# *receiver-relative* PingER measurement — the owner's values describe
+# its own paths, so applying them would corrupt the receiver's view.
+OWNER_FIELDS = ("cap", "queue", "work", "load")
+
+
+@dataclass(frozen=True)
+class SiteAdvert:
+    """One advertised site row: the packed (8,) float64 ``SitePack``
+    column in ``PACK_FIELDS`` order plus liveness, free slots, the
+    owner's monotonic epoch and the owner's clock at measurement."""
+
+    site: str
+    row: np.ndarray            # (8,) float64 — PACK_FIELDS order
+    alive: bool
+    free_slots: float
+    version: int
+    stamp: float
+
+
+def advert_wire_bytes(advert: SiteAdvert) -> int:
+    """Serialized size of one advert: 8 f64 row + version + stamp +
+    free_slots + alive byte + site name (wire-format compression of
+    these rows is a ROADMAP follow-up)."""
+    return 8 * 8 + 8 + 8 + 8 + 1 + len(advert.site)
+
+
+@dataclass
+class ExchangeStats:
+    """Counters for the exchange cost the p2p bench reports."""
+
+    rounds: int = 0
+    adverts_sent: int = 0
+    adverts_applied: int = 0
+    bytes_sent: int = 0
+    deliveries: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "adverts_sent": self.adverts_sent,
+            "adverts_applied": self.adverts_applied,
+            "bytes_sent": self.bytes_sent,
+            "deliveries": self.deliveries,
+        }
+
+
+class PeerScheduler:
+    """One home site's DIANA scheduler in the decentralized deployment.
+
+    ``sites``/``links`` bootstrap the world view (the §IX join
+    protocol's initial full-state exchange); afterwards only the home
+    columns are ever read from authoritative state
+    (``refresh_dynamic(only=home)``) — every remote column changes
+    exclusively through ``receive``-d adverts. ``home_sites`` lets one
+    peer own a partition of sites (the simulator runs N peers over S >
+    N sites); the default is the single ``home`` site of the paper's
+    one-scheduler-per-site deployment.
+    """
+
+    def __init__(
+        self,
+        home: str,
+        sites: dict[str, SiteState],
+        links: dict[str, NetworkLink],
+        weights: CostWeights = CostWeights(),
+        home_sites: Optional[Sequence[str]] = None,
+        order: Optional[Sequence[str]] = None,
+        now: float = 0.0,
+    ):
+        self.home = home
+        self.home_names = list(home_sites) if home_sites is not None else [home]
+        if home not in self.home_names:
+            raise ValueError(f"home {home!r} must be in home_sites {self.home_names!r}")
+        self.home_sites = frozenset(self.home_names)
+        unknown = self.home_sites - set(sites)
+        if unknown:
+            raise KeyError(f"home site(s) {sorted(unknown)!r} not in sites")
+        self.links = dict(links)
+        self.weights = weights
+        self.engine = PlacementEngine(weights)
+        # Authoritative references for the home partition only; remote
+        # SiteState objects are never retained (that's the point).
+        self.authoritative: dict[str, SiteState] = {
+            n: sites[n] for n in self.home_names
+        }
+        self.view = SitePack.from_scheduler(sites, links, order=order)
+        S = len(self.view.names)
+        self._col = {n: i for i, n in enumerate(self.view.names)}
+        self.home_cols = np.asarray([n in self.home_sites for n in self.view.names])
+        self.version = np.zeros(S, np.int64)
+        self.stamp = np.full(S, float(now))
+        self.free = np.asarray(
+            [sites[n].free_slots for n in self.view.names], np.float64
+        )
+        # Remote columns this peer has speculatively modified (its own
+        # optimistic placement feedback). A dirty row is this peer's
+        # *belief*, not the owner's measurement — it must never be
+        # re-advertised under the owner's epoch (a receiver would
+        # record speculation as owner truth and, because merges need a
+        # strictly newer epoch, couldn't be corrected until the owner's
+        # next advert). The owner's next applied advert cleans it.
+        self._dirty = np.zeros(S, bool)
+        # Optional measurement source: when the authority regenerates
+        # SiteState snapshots per reading (the grid simulator does),
+        # refresh_home pulls fresh ones through this callable.
+        self.state_provider: Optional[callable] = None
+
+    # -- world-view maintenance ------------------------------------------------
+    def refresh_home(
+        self,
+        now: Optional[float] = None,
+        states: Optional[dict[str, SiteState]] = None,
+    ) -> None:
+        """Re-measure the home columns from authoritative state and
+        open a new epoch for each (the advertisement version). ``states``
+        swaps in fresh authoritative snapshots first (the simulator
+        regenerates ``SiteState`` objects per measurement)."""
+        if states is None and self.state_provider is not None:
+            states = {n: self.state_provider(n) for n in self.home_names}
+        if states is not None:
+            for n, st in states.items():
+                if n not in self.home_sites:
+                    raise KeyError(f"{n!r} is not a home site of peer {self.home!r}")
+                self.authoritative[n] = st
+        self.view.refresh_dynamic(self.authoritative, only=self.home_names)
+        cols = np.flatnonzero(self.home_cols)
+        for c in cols:
+            self.free[c] = self.authoritative[self.view.names[c]].free_slots
+        self.version[cols] += 1
+        if now is not None:
+            self.stamp[cols] = now
+
+    def staleness(self, now: float) -> np.ndarray:
+        """Seconds since each column's row was measured by its owner;
+        home columns are always fresh (0)."""
+        out = np.maximum(0.0, now - self.stamp)
+        out[self.home_cols] = 0.0
+        return out
+
+    # -- gossip/epoch advertisement --------------------------------------------
+    def adverts(self, cols: Optional[Sequence[int]] = None) -> list[SiteAdvert]:
+        """Advertise packed rows (gossip: own rows *and* hearsay — the
+        per-row version lets receivers keep only what's newer). Rows
+        this peer has speculatively modified (optimistic placement
+        feedback onto remote sites) are withheld: only owner-measured
+        content travels under an owner epoch."""
+        idx = np.arange(len(self.view.names)) if cols is None else np.asarray(cols)
+        idx = idx[~self._dirty[idx]]
+        rows = self.view.pack_rows(idx)
+        return [
+            SiteAdvert(
+                site=self.view.names[c],
+                row=rows[:, k].copy(),
+                alive=bool(self.view.alive[c]),
+                free_slots=float(self.free[c]),
+                version=int(self.version[c]),
+                stamp=float(self.stamp[c]),
+            )
+            for k, c in enumerate(idx)
+        ]
+
+    def receive(self, adverts: Sequence[SiteAdvert]) -> int:
+        """Merge advertised rows into the world view, row-versioned:
+        only strictly newer epochs apply, and home columns (this peer's
+        authority) are never overwritten by hearsay, and only the
+        owner-authoritative ``OWNER_FIELDS`` apply — this peer's own
+        path measurements (bw/loss/rtt/mss) stay untouched. Receive
+        time is deliberately irrelevant: staleness is keyed to the
+        *owner's* stamp carried in the advert, so a delayed delivery
+        arrives already-aged. Returns the number of applied rows."""
+        known = [a for a in adverts if a.site in self._col]
+        if not known:
+            return 0
+        cols = np.asarray([self._col[a.site] for a in known], np.int64)
+        rows = np.stack([a.row for a in known], axis=1)
+        applied = merge_packed_rows(
+            self.view,
+            self.version,
+            self.stamp,
+            cols,
+            rows,
+            new_version=np.asarray([a.version for a in known], np.int64),
+            new_stamp=np.asarray([a.stamp for a in known], np.float64),
+            alive=np.asarray([a.alive for a in known], bool),
+            protect=self.home_cols,
+            fields=OWNER_FIELDS,
+        )
+        if applied.any():
+            self.free[cols[applied]] = np.asarray(
+                [a.free_slots for a in known], np.float64
+            )[applied]
+            self._dirty[cols[applied]] = False  # owner truth replaces speculation
+        return int(applied.sum())
+
+    # -- placement over the world view -----------------------------------------
+    def rank_sites_batch(
+        self,
+        jobs: Sequence[Job],
+        job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+        now: Optional[float] = None,
+    ) -> list[list[tuple[str, float]]]:
+        self.refresh_home(now)
+        return self.engine.rank(self.engine.pack_jobs(jobs, job_classes), self.view)
+
+    def select_sites_batch(
+        self,
+        jobs: Sequence[Job],
+        job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+        now: Optional[float] = None,
+    ):
+        self.refresh_home(now)
+        return self.engine.select(self.engine.pack_jobs(jobs, job_classes), self.view)
+
+    def place_batch(
+        self,
+        jobs: Sequence[Job],
+        job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+        now: Optional[float] = None,
+    ):
+        """Batched §V placement against the (possibly stale) world view.
+
+        Remote columns keep the optimistic local feedback (this peer's
+        own recent placements — the paper's "after every job we
+        calculate the cost to submit the next job", per peer); home
+        columns are committed back to the authoritative ``SiteState``.
+        With every site home, this is bit-identical to
+        ``DianaScheduler.place_batch``.
+        """
+        self.refresh_home(now)
+        jp = JobPack.from_jobs(jobs, job_classes)
+        placement = self.engine.replay(jp, self.view)
+        for job, name in zip(jobs, placement.sites):
+            job.site = name
+        for c in set(int(i) for i in placement.site_indices):
+            if not self.home_cols[c]:
+                self._dirty[c] = True
+        self._commit_home()
+        return placement
+
+    def note_remote_placement(self, site: str, work: float) -> None:
+        """Optimistic local feedback for a placement committed outside
+        this class (the simulator admits jobs at the authoritative
+        site): bump the view so this peer's next placement sees it.
+        Home columns are skipped — they get truth on the next refresh."""
+        c = self._col[site]
+        if self.home_cols[c]:
+            return
+        self.view.queue[c] += 1.0
+        self.view.work[c] += work
+        self._dirty[c] = True
+
+    def _commit_home(self) -> None:
+        for c in np.flatnonzero(self.home_cols):
+            st = self.authoritative[self.view.names[c]]
+            st.queue_length = float(self.view.queue[c])
+            st.waiting_work = float(self.view.work[c])
+
+    # -- §VIII bulk groups over the world view ---------------------------------
+    def view_states(self) -> dict[str, SiteState]:
+        """Materialize the world view as a ``SiteState`` dict (for the
+        dict-shaped §VIII group logic; per-job placement stays packed)."""
+        return {
+            n: SiteState(
+                name=n,
+                capacity=float(self.view.cap[i]),
+                queue_length=float(self.view.queue[i]),
+                waiting_work=float(self.view.work[i]),
+                load=float(self.view.load[i]),
+                alive=bool(self.view.alive[i]),
+                free_slots=float(self.free[i]),
+            )
+            for i, n in enumerate(self.view.names)
+        }
+
+    def schedule_group(
+        self,
+        group: BulkGroup,
+        max_group_fraction: float = 1.0,
+        now: Optional[float] = None,
+    ) -> GroupPlacement:
+        """§VIII group placement from this peer's world view: the group
+        is selected/split exactly like ``BulkScheduler.schedule_group``
+        but against advertised (possibly stale) state; commits land in
+        the view (and authoritatively for home columns)."""
+        self.refresh_home(now)
+        states = self.view_states()
+        placement = BulkScheduler(
+            DianaScheduler(states, self.links, self.weights), max_group_fraction
+        ).schedule_group(group)
+        # Pull the committed queue/work deltas back into the packed view.
+        for i, n in enumerate(self.view.names):
+            st = states[n]
+            if (
+                st.queue_length != self.view.queue[i]
+                or st.waiting_work != self.view.work[i]
+            ):
+                self.view.queue[i] = st.queue_length
+                self.view.work[i] = st.waiting_work
+                if not self.home_cols[i]:
+                    self._dirty[i] = True
+        self._commit_home()
+        return placement
+
+
+def single_peer(
+    sites: dict[str, SiteState],
+    links: dict[str, NetworkLink],
+    weights: CostWeights = CostWeights(),
+    order: Optional[Sequence[str]] = None,
+) -> PeerScheduler:
+    """The degenerate 1-peer deployment: every site is home, nothing is
+    ever stale — the omniscient single-scheduler special case whose
+    placements are bit-identical to ``DianaScheduler``."""
+    names = list(sites)
+    return PeerScheduler(
+        home=names[0], sites=sites, links=links, weights=weights,
+        home_sites=names, order=order,
+    )
+
+
+class GossipExchange:
+    """Drives advertisement rounds between N peers.
+
+    ``topology`` enables the hierarchy-aware fan-out: peers are grouped
+    by the RootGrid their home site belongs to; within a group everyone
+    exchanges with everyone (SubGrid tier), and each group's
+    representative (lowest home name) exchanges with the other groups'
+    representatives (RootGrid tier). Without a topology the fan-out is
+    a full mesh. ``fanout`` caps a peer's per-round neighbor list,
+    rotating deterministically across rounds so coverage stays total.
+    ``latency_s`` delays delivery: adverts sent at t arrive at
+    t+latency (``deliver_due`` drains what's due).
+    """
+
+    def __init__(
+        self,
+        peers: Sequence[PeerScheduler],
+        topology: Optional[GridTopology] = None,
+        latency_s: float = 0.0,
+        fanout: Optional[int] = None,
+    ):
+        self.peers = list(peers)
+        self.topology = topology
+        self.latency_s = float(latency_s)
+        self.fanout = fanout
+        self.stats = ExchangeStats()
+        self._seq = itertools.count()
+        self._in_flight: list[tuple[float, int, int, list[SiteAdvert]]] = []
+        self._groups = self._tier_groups()
+        self._reps = [g[0] for g in self._groups]
+        self._group_of = {
+            i: gi for gi, g in enumerate(self._groups) for i in g
+        }
+
+    # -- hierarchy-aware fan-out ----------------------------------------------
+    def _rootgrid_of(self, home: str) -> str:
+        """The RootGrid tier a peer's home site belongs to; an unknown
+        site forms its own singleton tier."""
+        if self.topology is None:
+            return "mesh"
+        roots = self.topology.rootgrids
+        if home in roots:
+            return home
+        for site, root in roots.items():
+            if home in root.node_table:
+                return site
+        return home
+
+    def _tier_groups(self) -> list[list[int]]:
+        groups: dict[str, list[int]] = {}
+        for i, p in enumerate(self.peers):
+            groups.setdefault(self._rootgrid_of(p.home), []).append(i)
+        return [
+            sorted(g, key=lambda i: self.peers[i].home)
+            for _, g in sorted(groups.items())
+        ]
+
+    def neighbors(self, idx: int, rnd: int) -> list[int]:
+        """This round's fan-out set for peer ``idx``."""
+        group = self._groups[self._group_of[idx]]
+        out = [j for j in group if j != idx]
+        if idx == group[0]:  # the tier representative bridges tiers
+            out += [r for r in self._reps if r != idx]
+        if self.fanout is not None and len(out) > self.fanout:
+            start = (rnd * self.fanout) % len(out)
+            out = [out[(start + k) % len(out)] for k in range(self.fanout)]
+        return out
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._in_flight)
+
+    def next_due(self) -> float:
+        """Arrival time of the earliest in-flight advertisement."""
+        if not self._in_flight:
+            raise ValueError("no adverts in flight")
+        return self._in_flight[0][0]
+
+    # -- protocol --------------------------------------------------------------
+    def deliver_due(self, now: float) -> int:
+        """Deliver every in-flight advertisement whose latency elapsed."""
+        applied = 0
+        while self._in_flight and self._in_flight[0][0] <= now:
+            _, _, j, adverts = heapq.heappop(self._in_flight)
+            applied += self.peers[j].receive(adverts)
+            self.stats.deliveries += 1
+        self.stats.adverts_applied += applied
+        return applied
+
+    def round(self, now: float) -> ExchangeStats:
+        """One advertisement round: every peer re-measures its home
+        rows (a new epoch) and gossips everything it knows to its
+        fan-out set. Zero-latency sends apply immediately (so adverts
+        cascade through the mesh within the round); otherwise they
+        queue until ``deliver_due``."""
+        self.stats.rounds += 1
+        for p in self.peers:
+            p.refresh_home(now)
+        for i, p in enumerate(self.peers):
+            targets = self.neighbors(i, self.stats.rounds)
+            if not targets:
+                continue
+            adverts = p.adverts()
+            size = sum(advert_wire_bytes(a) for a in adverts)
+            for j in targets:
+                self.stats.adverts_sent += len(adverts)
+                self.stats.bytes_sent += size
+                if self.latency_s <= 0.0:
+                    self.stats.adverts_applied += self.peers[j].receive(adverts)
+                    self.stats.deliveries += 1
+                else:
+                    heapq.heappush(
+                        self._in_flight,
+                        (now + self.latency_s, next(self._seq), j, adverts),
+                    )
+        return self.stats

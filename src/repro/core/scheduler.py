@@ -20,8 +20,6 @@ from typing import TYPE_CHECKING, Optional, Sequence
 if TYPE_CHECKING:
     from .batch import BatchPlacement
 
-import numpy as np
-
 from .costs import (
     CostWeights,
     JobDemand,
@@ -85,6 +83,17 @@ class DianaScheduler:
         self.links = links
         self.weights = weights
 
+    @property
+    def engine(self):
+        """The pure placement algorithm (PlacementEngine); this class
+        owns the authoritative dicts and feeds it fresh packs
+        (PeerScheduler feeds the same engine its stale world view).
+        Derived per access so a mutated ``self.weights`` reaches every
+        batch API, like the scalar paths."""
+        from .engine import PlacementEngine  # late: engine imports batch
+
+        return PlacementEngine(self.weights)
+
     # -- §IV cost vectors ----------------------------------------------------
     def cost_vectors(self, demand: JobDemand) -> dict[str, tuple[float, float, float]]:
         """(network, computation, data-transfer) per site, in seconds."""
@@ -146,13 +155,7 @@ class DianaScheduler:
         from . import batch as _batch
 
         sp = _batch.SitePack.from_scheduler(self.sites, self.links)
-        jp = _batch.JobPack.from_jobs(jobs, job_classes)
-        cost = _batch.batched_cost_matrix(jp, sp, self.weights, mask_dead=False)
-        order = np.argsort(cost, axis=1, kind="stable")
-        return [
-            [(sp.names[s], float(cost[j, s])) for s in order[j]]
-            for j in range(len(jobs))
-        ]
+        return self.engine.rank(self.engine.pack_jobs(jobs, job_classes), sp)
 
     def select_sites_batch(
         self,
@@ -164,11 +167,7 @@ class DianaScheduler:
         from . import batch as _batch
 
         sp = _batch.SitePack.from_scheduler(self.sites, self.links)
-        jp = _batch.JobPack.from_jobs(jobs, job_classes)
-        cost = _batch.batched_cost_matrix(jp, sp, self.weights, mask_dead=True)
-        placement = _batch.batched_argmin(cost, sp)
-        placement.classes = jp.classes
-        return placement
+        return self.engine.select(self.engine.pack_jobs(jobs, job_classes), sp)
 
     def place_batch(
         self,

@@ -1,8 +1,8 @@
 """Discrete-event grid simulator (MONARC analogue, paper §XI)."""
-from .grid import GridSim, SimResult, uniform_links
+from .grid import GridSim, P2PGridSim, SimResult, uniform_links
 from .workloads import SimJob, bulk_burst, cms_case_study, paper_grid_spec, poisson_stream
 
 __all__ = [
-    "GridSim", "SimResult", "uniform_links",
+    "GridSim", "P2PGridSim", "SimResult", "uniform_links",
     "SimJob", "bulk_burst", "cms_case_study", "paper_grid_spec", "poisson_stream",
 ]

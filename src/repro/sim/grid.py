@@ -40,10 +40,13 @@ from repro.core import (
     select_peer,
 )
 from repro.core.batch import comp_site_column
+from repro.core.bulk import stable_user_peer
 from repro.core.migration import MigrationDecision, apply_migration, select_peer_targets
+from repro.core.p2p import GossipExchange, PeerScheduler
+from repro.core.topology import GridTopology
 from .workloads import SimJob
 
-__all__ = ["GridSim", "SimResult", "uniform_links"]
+__all__ = ["GridSim", "P2PGridSim", "SimResult", "uniform_links"]
 
 
 def uniform_links(
@@ -262,15 +265,22 @@ class GridSim:
     def _eff_bw(self, a: str, b: str) -> float:
         return self.links[(a, b)].effective_bandwidth()
 
-    def placement_cost(self, sj: SimJob, site: str) -> float:
-        st = self.sites[site].state()
+    def _static_terms(self, sj: SimJob, site: str) -> tuple[float, float]:
+        """The job-constant §IV terms (net, dtc) of ``placement_cost``
+        — the single scalar source of the formula (P2P placement swaps
+        only the computation term, so it must share these)."""
         net = network_cost(self.links[(sj.origin_site, site)])
-        comp = computation_cost(st, self.weights) + sj.work / st.capacity
         dtc = 0.0
         if sj.data_site is not None and sj.data_site != site:
             dtc += sj.input_bytes / self._eff_bw(sj.data_site, site)
         if sj.origin_site != site:
             dtc += sj.output_bytes / self._eff_bw(site, sj.origin_site)
+        return net, dtc
+
+    def placement_cost(self, sj: SimJob, site: str) -> float:
+        st = self.sites[site].state()
+        net, dtc = self._static_terms(sj, site)
+        comp = computation_cost(st, self.weights) + sj.work / st.capacity
         return net + comp + dtc
 
     def _service_seconds(self, sj: SimJob, site: str) -> float:
@@ -430,6 +440,11 @@ class GridSim:
                 events,
                 (t0 + self.migration_interval_s, next(self._seq), "migrate", None),
             )
+            if getattr(self, "exchange_interval_s", None):
+                heapq.heappush(
+                    events,
+                    (t0 + self.exchange_interval_s, next(self._seq), "exchange", None),
+                )
         horizon = until if until is not None else float("inf")
 
         while events:
@@ -456,16 +471,52 @@ class GridSim:
                 self._on_finish(site_name, cj, now, events)
             elif kind == "migrate":
                 self._on_migrate_check(now, events)
-                if any(s.queue_len() for s in self.sites.values()) or any(
-                    e[2] == "arrive" for e in events
-                ):
+                if self._work_remaining(events):
                     heapq.heappush(
                         events,
                         (now + self.migration_interval_s, next(self._seq), "migrate", None),
                     )
+            elif kind == "exchange":
+                # Multi-scheduler mode only (P2PGridSim): a peer
+                # advertisement round, rescheduled while work remains
+                # (in-flight adverts drain via "deliver" events, so they
+                # must NOT keep the exchange alive — each round sends
+                # new ones and the sim would never terminate).
+                self._on_exchange(now, events)
+                if self._work_remaining(events):
+                    heapq.heappush(
+                        events,
+                        (now + self.exchange_interval_s, next(self._seq), "exchange", None),
+                    )
+            elif kind == "deliver":
+                self._on_deliver(now, events)
         return SimResult(
             jobs=jobs, timeline=self.timeline, bucket_s=self.bucket_s, policy=self.policy
         )
+
+    def _work_remaining(self, events: list) -> bool:
+        """Whether the periodic events (migrate/exchange) should keep
+        rescheduling: queued jobs anywhere, or arrivals still to come.
+        One predicate for both so they always stop together."""
+        return any(s.queue_len() for s in self.sites.values()) or any(
+            e[2] == "arrive" for e in events
+        )
+
+    # -- multi-scheduler hooks (no-ops in the omniscient base sim) -----------
+    #: §IX trust horizon: peers whose advertised rows are older than this
+    #: are not polled for migration (P2PGridSim overrides the staleness).
+    migration_max_staleness_s = float("inf")
+
+    def _on_exchange(self, now: float, events: list) -> None:
+        """Peer advertisement round (P2PGridSim)."""
+
+    def _on_deliver(self, now: float, events: list) -> None:
+        """Latency-delayed advert delivery (P2PGridSim)."""
+
+    def _migration_staleness(self, name: str, now: float) -> Optional[np.ndarray]:
+        """Per-column (sorted-name order) age of the deciding
+        scheduler's world view; None = omniscient (zero staleness)."""
+        return None
 
     # -- handlers ------------------------------------------------------------
     def _bucket(self, site: str, key: str, now: float) -> None:
@@ -595,6 +646,13 @@ class GridSim:
         """The per-job §IX reference loop for one congested site.
         Returns the sites whose queues it mutated."""
         touched: set[str] = set()
+        stale = self._migration_staleness(name, now)
+        trusted = None
+        if stale is not None:
+            trusted = {
+                n for n in self.sites
+                if stale[self._site_idx[n]] <= self.migration_max_staleness_s
+            }
         for cj in list(site.mlfq.low_priority_jobs()):
             sj = self._cj2sj[cj.job_id]
             peers = [
@@ -605,7 +663,7 @@ class GridSim:
                     total_cost=self.placement_cost(sj, p),
                 )
                 for p in self.sites
-                if p != name
+                if p != name and (trusted is None or p in trusted)
             ]
             decision = select_peer(
                 cj, name,
@@ -719,8 +777,13 @@ class GridSim:
             ja[:, s] = self._jobs_ahead_column(pname, cand_p)
         pinned = np.asarray([cj.migrated for cj in cands], bool)
         excluded = np.asarray([n == name for n in names])
+        # P2P mode: only poll peers whose advertised rows are fresh
+        # enough (sorted-order staleness permuted into dict order).
+        stale = self._migration_staleness(name, now)
+        stale_d = None if stale is None else stale[perm]
         migrate, best = select_peer_targets(
-            pinned, ja[:, local_col], cost[:, local_col], excluded, ja, cost
+            pinned, ja[:, local_col], cost[:, local_col], excluded, ja, cost,
+            staleness=stale_d, max_staleness=self.migration_max_staleness_s,
         )
         i = 0
         while i < R:
@@ -753,4 +816,200 @@ class GridSim:
             migrate[rest], best[rest] = select_peer_targets(
                 pinned[rest], ja[rest, local_col], cost[rest, local_col],
                 excluded, ja[rest], cost[rest],
+                staleness=stale_d, max_staleness=self.migration_max_staleness_s,
             )
+
+
+class P2PGridSim(GridSim):
+    """Multi-scheduler mode: the paper's decentralized deployment
+    (§III/§IX) over the same event stream.
+
+    The grid's sites are partitioned round-robin (sorted order) across
+    ``num_peers`` ``PeerScheduler``s. Each peer owns its partition's
+    authoritative state and sees every other site only through the
+    gossip exchange: every ``exchange_interval_s`` each peer
+    re-measures its home rows and advertises its whole world view to
+    its fan-out set (hierarchy-aware when a ``GridTopology`` is given);
+    adverts arrive ``exchange_latency_s`` later. A job is placed by the
+    peer owning its origin site, from that peer's — possibly stale —
+    view of the remote queues; the owning site *reconciles* by simply
+    enqueueing whatever arrives (its authoritative queue is ground
+    truth, and the next exchange round propagates the correction).
+    Placements the submitting peer makes onto remote sites bump its own
+    view optimistically so its consecutive placements see each other.
+
+    §IX migration stays a direct poll (queue lengths/jobsAhead come
+    from the polled peer), but a congested site's scheduler only polls
+    peers whose advertised rows are at most
+    ``migration_max_staleness_s`` old (default: two exchange intervals
+    plus the latency) — it doesn't trust, so it doesn't ask.
+
+    ``num_peers=1`` with any exchange interval is the omniscient
+    special case: every site is home, nothing is ever stale, and the
+    event stream is bit-identical to the single-scheduler ``GridSim``.
+    """
+
+    def __init__(
+        self,
+        site_nodes: dict[str, int],
+        num_peers: int = 3,
+        exchange_interval_s: float = 60.0,
+        exchange_latency_s: float = 0.0,
+        migration_max_staleness_s: Optional[float] = None,
+        topology: Optional[GridTopology] = None,
+        gossip_fanout: Optional[int] = None,
+        **kw,
+    ):
+        kw.setdefault("policy", "diana")
+        if kw["policy"] != "diana":
+            raise ValueError("multi-scheduler mode requires the 'diana' policy")
+        if exchange_interval_s <= 0.0:
+            raise ValueError(
+                "exchange_interval_s must be > 0 (the run loop schedules "
+                "exchange rounds at this period)"
+            )
+        super().__init__(site_nodes, **kw)
+        self.exchange_interval_s = float(exchange_interval_s)
+        self.exchange_latency_s = float(exchange_latency_s)
+        names = self._names_sorted
+        N = max(1, min(int(num_peers), len(names)))
+        self.num_peers = N
+        if migration_max_staleness_s is None:
+            # Default trust horizon in rounds-behind: a freshly-heard
+            # row is at most one relay hop old on a full mesh; with a
+            # topology a cross-tier row travels owner → rep → rep →
+            # member (~3 rounds); a fanout cap rotates the neighbor
+            # list, so a given owner is heard only every
+            # ceil(neighbors/fanout) rounds. Too tight a default would
+            # permanently distrust peers and silently disable §IX
+            # migration.
+            hops = 3 if topology is not None else 1
+            if gossip_fanout is not None and N > 1:
+                rotation = -(-(N - 1) // max(1, int(gossip_fanout)))
+                hops = max(hops, rotation)
+            migration_max_staleness_s = (
+                (1 + hops) * self.exchange_interval_s + self.exchange_latency_s
+            )
+        self.migration_max_staleness_s = float(migration_max_staleness_s)
+        states = {n: self.sites[n].state() for n in names}
+        # The event loop costs placements on the sim's pair-structured
+        # planes and reads only the peers' dynamic (comp) columns, so
+        # the peers' own link rows never influence the simulation. They
+        # DO back the public PeerScheduler API (sim.peers[i].place_batch
+        # / rank_sites_batch), so give each peer its paper-faithful
+        # home-relative row of the real table; a partial table falls
+        # back to a placeholder (the public cost planes are then
+        # meaningless, like the sequential fallback paths).
+        self.peers = []
+        for i in range(N):
+            home = names[i]
+            try:
+                plinks = {n: self.links[(home, n)] for n in names}
+            except KeyError:
+                plinks = {n: NetworkLink(bandwidth_Bps=1.0) for n in names}
+            self.peers.append(
+                PeerScheduler(
+                    home=home, sites=states, links=plinks,
+                    weights=self.weights, home_sites=names[i::N], order=names,
+                )
+            )
+        self._peer_by_site = {}
+        for p in self.peers:
+            p.state_provider = lambda n: self.sites[n].state()
+            for n in p.home_names:
+                self._peer_by_site[n] = p
+        self.exchange = GossipExchange(
+            self.peers, topology=topology,
+            latency_s=self.exchange_latency_s, fanout=gossip_fanout,
+        )
+
+    def run(self, jobs: list[SimJob], until: Optional[float] = None) -> SimResult:
+        # The construction-time view snapshot is the §IX join
+        # protocol's initial full-state exchange — it happens at sim
+        # start, so seed the stamp vectors at the first arrival (a
+        # trace resuming at large t0 must not read the bootstrap as
+        # hours-stale and distrust every peer until the first round).
+        if jobs:
+            t0 = min(j.arrival for j in jobs)
+            for p in self.peers:
+                np.maximum(p.stamp, t0, out=p.stamp)
+        return super().run(jobs, until)
+
+    # -- routing ---------------------------------------------------------------
+    def _submit_peer(self, sj: SimJob) -> PeerScheduler:
+        """The scheduler a job enters the grid through: the peer owning
+        its origin site; off-grid origins hash stably by user (the same
+        rule group routing uses, so a user's jobs and groups agree)."""
+        p = self._peer_by_site.get(sj.origin_site)
+        if p is None:
+            p = stable_user_peer(sj.user, self.peers)
+        return p
+
+    # -- stale-view placement --------------------------------------------------
+    def _comp_vec(self, sj: SimJob) -> np.ndarray:
+        """The live computation column, replaced by the submitting
+        peer's world view: home columns are re-measured per job (the
+        peer owns them — same freshness as the omniscient sim), remote
+        columns are whatever the last exchange advertised."""
+        peer = self._submit_peer(sj)
+        peer.refresh_home()
+        return comp_site_column(peer.view, self.weights) + sj.work / peer.view.cap
+
+    def choose_site(self, sj: SimJob) -> str:
+        comp = self._comp_vec(sj)
+        costs = []
+        for i, name in enumerate(self._names_sorted):
+            net, dtc = self._static_terms(sj, name)
+            costs.append((net + comp[i] + dtc, name))
+        return min(costs)[1]
+
+    def choose_sites_batch(self, batch: list[SimJob]) -> list[str]:
+        """Snapshot API, vectorized like ``_on_arrive_batch``: the
+        memoized static (net, dtc) planes are shared across the batch
+        and only the computation column comes from each row's own
+        peer view — equivalent to ``[self.choose_site(sj) for sj in
+        batch]`` (the omniscient sim's shared-base shortcut doesn't
+        apply because rows may belong to different peers' views)."""
+        if not self._batch_eligible(batch):
+            return [self.choose_site(sj) for sj in batch]
+        net, dtc = self._static_cost_rows(batch)
+        return [
+            self._names_sorted[int(np.argmin((net[i] + self._comp_vec(sj)) + dtc[i]))]
+            for i, sj in enumerate(batch)
+        ]
+
+    def _admit(self, sj: SimJob, target: str, now: float, events: list) -> None:
+        super()._admit(sj, target, now, events)
+        # Optimistic local feedback: the submitting peer's next
+        # placement sees this one. Home targets get truth on the next
+        # refresh; remote targets keep the (dirty, never re-advertised)
+        # estimate until the owner's advert corrects it.
+        self._submit_peer(sj).note_remote_placement(target, sj.work)
+
+    # -- exchange events -------------------------------------------------------
+    def _on_exchange(self, now: float, events: list) -> None:
+        self.exchange.deliver_due(now)
+        self.exchange.round(now)
+        if self.exchange.in_flight:
+            heapq.heappush(
+                events, (self.exchange.next_due(), next(self._seq), "deliver", None)
+            )
+
+    def _on_deliver(self, now: float, events: list) -> None:
+        self.exchange.deliver_due(now)
+        # Chain to the next in-flight batch: with latency > interval,
+        # several batches are airborne at once and the exchange event
+        # may already have stopped rescheduling — every sent advert
+        # must still land.
+        if self.exchange.in_flight:
+            heapq.heappush(
+                events, (self.exchange.next_due(), next(self._seq), "deliver", None)
+            )
+
+    # -- migration trust -------------------------------------------------------
+    def _migration_staleness(self, name: str, now: float) -> Optional[np.ndarray]:
+        peer = self._peer_by_site.get(name)
+        if peer is None:
+            return None
+        peer.refresh_home()
+        return peer.staleness(now)

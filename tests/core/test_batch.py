@@ -250,6 +250,39 @@ class TestSequentialEquivalence:
         assert bat.classes == classes
 
 
+class TestRefreshDynamic:
+    """refresh_dynamic(only=...) input validation: unknown site ids are
+    a caller bug — raise by default, filter-with-warning on request."""
+
+    def _pack(self):
+        rng = np.random.default_rng(5)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        return sites, SitePack.from_scheduler(sites, links)
+
+    def test_unknown_only_ids_raise_keyerror(self):
+        sites, sp = self._pack()
+        with pytest.raises(KeyError, match="ghost"):
+            sp.refresh_dynamic(sites, only=["s0", "ghost"])
+
+    def test_missing_warn_filters_and_refreshes_known(self):
+        sites, sp = self._pack()
+        sites["s1"].queue_length = 321.0
+        with pytest.warns(UserWarning, match="ghost"):
+            sp.refresh_dynamic(sites, only=["s1", "ghost"], missing="warn")
+        assert sp.queue[1] == 321.0
+
+    def test_invalid_missing_mode_rejected(self):
+        sites, sp = self._pack()
+        with pytest.raises(ValueError):
+            sp.refresh_dynamic(sites, only=["ghost"], missing="skip")
+
+    def test_known_ids_unaffected_by_strictness(self):
+        sites, sp = self._pack()
+        sites["s2"].waiting_work = 99.0
+        sp.refresh_dynamic(sites, only=["s2"])
+        assert sp.work[2] == 99.0
+
+
 class TestBulkGroupsEquivalence:
     @given(seed=st.integers(0, 10_000))
     @settings(max_examples=15, deadline=None)

@@ -185,6 +185,89 @@ class TestSelectPeersBatch:
             self._assert_rows_match(jobs, "p0", lja, lcost, names, ja, cost,
                                     alive=alive)
 
+    def test_empty_candidate_matrix_returns_empty(self):
+        """Regression: J=0 must yield an empty decision list / empty
+        target arrays instead of relying on callers to pre-filter."""
+        import numpy as np
+
+        from repro.core import select_peers_batch
+        from repro.core.migration import select_peer_targets
+
+        names = ["a", "b"]
+        empty_plane = np.zeros((0, 2))
+        assert select_peers_batch([], "local", np.zeros(0), np.zeros(0),
+                                  names, empty_plane, empty_plane) == []
+        # An empty 1-D array (the natural result of np.asarray([])) is
+        # accepted too — this used to crash on tuple unpacking.
+        assert select_peers_batch([], "local", np.zeros(0), np.zeros(0),
+                                  names, np.asarray([]), np.asarray([])) == []
+        migrate, best = select_peer_targets(
+            np.zeros(0, bool), np.zeros(0), np.zeros(0),
+            np.zeros(2, bool), empty_plane, empty_plane,
+        )
+        assert migrate.shape == (0,) and best.shape == (0,)
+        migrate, best = select_peer_targets(
+            np.zeros(0, bool), np.zeros(0), np.zeros(0),
+            np.zeros(2, bool), np.asarray([]), np.asarray([]),
+        )
+        assert migrate.shape == (0,) and best.shape == (0,)
+        # Jobs but NO peers — a (J, 0) plane: every row must come back
+        # as a no-migrate row, not be dropped to length 0.
+        migrate, best = select_peer_targets(
+            np.zeros(3, bool), np.zeros(3), np.zeros(3),
+            np.zeros(0, bool), np.zeros((3, 0)), np.zeros((3, 0)),
+        )
+        assert migrate.shape == (3,) and not migrate.any()
+        decisions = select_peers_batch(
+            [Job(user="u") for _ in range(3)], "local",
+            np.zeros(3), np.zeros(3), [], np.zeros((3, 0)), np.zeros((3, 0)),
+        )
+        assert len(decisions) == 3
+        assert all(not d.migrate for d in decisions)
+        # A non-empty 1-D cost row (missing [None, :]) is a shape bug
+        # and must fail loudly in both APIs, not silently drop (or
+        # crash with a cryptic unpack error on) decisions.
+        with pytest.raises(ValueError, match="plane"):
+            select_peer_targets(
+                np.zeros(1, bool), np.zeros(1), np.zeros(1),
+                np.zeros(2, bool), np.zeros(2), np.zeros(2),
+            )
+        with pytest.raises(ValueError, match="plane"):
+            select_peers_batch([Job(user="u")], "local", [9], [5.0],
+                               ["a", "b"], np.zeros(2), np.zeros(2))
+
+    def test_stale_columns_are_not_trusted(self):
+        """P2P trust horizon: a cheaper-but-stale peer is skipped; with
+        every peer stale, nothing migrates and the reason says why."""
+        import numpy as np
+
+        from repro.core import select_peers_batch
+        from repro.core.migration import select_peer_targets
+
+        names = ["stale", "fresh"]
+        ja = np.asarray([[0.0, 2.0]])
+        cost = np.asarray([[0.5, 1.0]])
+        staleness = np.asarray([900.0, 10.0])
+        jobs = [Job(user="u")]
+        d = select_peers_batch(jobs, "local", [9], [5.0], names, ja, cost,
+                               staleness=staleness, max_staleness=60.0)
+        assert d[0].migrate and d[0].target == "fresh"
+        migrate, best = select_peer_targets(
+            np.asarray([False]), np.asarray([9.0]), np.asarray([5.0]),
+            np.zeros(2, bool), ja, cost,
+            staleness=staleness, max_staleness=60.0,
+        )
+        assert migrate[0] and best[0] == 1
+        # All stale → no migration, with a staleness-specific reason.
+        d = select_peers_batch(jobs, "local", [9], [5.0], names, ja, cost,
+                               staleness=np.asarray([900.0, 900.0]),
+                               max_staleness=60.0)
+        assert not d[0].migrate
+        assert d[0].reason == "no sufficiently fresh peers"
+        # No staleness vector → unchanged behavior (cheapest peer wins).
+        d = select_peers_batch(jobs, "local", [9], [5.0], names, ja, cost)
+        assert d[0].migrate and d[0].target == "stale"
+
     def test_targets_agree_with_decisions(self):
         """The array core (select_peer_targets) and the decision-object
         API pick the same rows and columns."""

@@ -1,0 +1,413 @@
+"""Decentralized P2P meta-scheduling: world views, gossip epochs,
+staleness, and the omniscient-single-scheduler special case."""
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    BulkGroup,
+    DianaScheduler,
+    GossipExchange,
+    GridTopology,
+    Job,
+    NetworkLink,
+    Node,
+    PeerScheduler,
+    SiteState,
+    route_groups,
+    single_peer,
+    submitting_peer,
+)
+from repro.core.p2p import SiteAdvert, advert_wire_bytes
+
+
+def _grid(rng, n_sites, dead_fraction=0.2):
+    sites, links = {}, {}
+    for i in range(n_sites):
+        name = f"s{i}"
+        sites[name] = SiteState(
+            name=name, capacity=float(rng.integers(10, 2000)),
+            queue_length=float(rng.integers(0, 100)),
+            waiting_work=float(rng.uniform(0, 1000)),
+            load=float(rng.uniform(0, 1)),
+            alive=bool(rng.uniform() > dead_fraction),
+        )
+        links[name] = NetworkLink(
+            bandwidth_Bps=float(rng.uniform(1e8, 1e10)),
+            loss_rate=0.0 if rng.uniform() < 0.3 else float(rng.uniform(1e-4, 0.05)),
+            rtt_s=float(rng.uniform(0.001, 0.3)),
+        )
+    if not any(s.alive for s in sites.values()):
+        next(iter(sites.values())).alive = True
+    return sites, links
+
+
+def _jobs(rng, n):
+    return [
+        Job(
+            user=f"u{i % 3}",
+            compute_work=float(rng.uniform(0.1, 200)),
+            input_bytes=float(rng.uniform(0, 50e9)),
+            output_bytes=float(rng.uniform(0, 1e9)),
+        )
+        for i in range(n)
+    ]
+
+
+def _peer_ring(sites, links, n_peers, **kw):
+    """n_peers PeerSchedulers over a round-robin partition of sites."""
+    names = list(sites)
+    return [
+        PeerScheduler(home=names[i], sites=copy.deepcopy(sites),
+                      links=dict(links), home_sites=names[i::n_peers],
+                      order=names, **kw)
+        for i in range(min(n_peers, len(names)))
+    ]
+
+
+class TestSinglePeerEquivalence:
+    """ISSUE acceptance: one peer owning every site, zero staleness,
+    must place bit-identically to DianaScheduler.place_batch."""
+
+    @given(seed=st.integers(0, 10_000), n_sites=st.integers(2, 24),
+           n_jobs=st.integers(1, 50))
+    @settings(max_examples=25, deadline=None)
+    def test_place_batch_bit_identical(self, seed, n_sites, n_jobs):
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, n_sites)
+        jobs = _jobs(rng, n_jobs)
+        diana = DianaScheduler(copy.deepcopy(sites), dict(links))
+        peer = single_peer(copy.deepcopy(sites), dict(links))
+        jA, jB = copy.deepcopy(jobs), copy.deepcopy(jobs)
+
+        a = diana.place_batch(jA)
+        b = peer.place_batch(jB)
+
+        assert a.sites == b.sites
+        assert list(a.costs) == list(b.costs)            # exact
+        assert a.classes == b.classes
+        assert [j.site for j in jA] == [j.site for j in jB]
+        for name in diana.sites:
+            assert diana.sites[name].queue_length == peer.authoritative[name].queue_length
+            assert diana.sites[name].waiting_work == peer.authoritative[name].waiting_work
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_rank_and_select_bit_identical(self, seed):
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 9)
+        jobs = _jobs(rng, 7)
+        diana = DianaScheduler(copy.deepcopy(sites), dict(links))
+        peer = single_peer(copy.deepcopy(sites), dict(links))
+        assert diana.rank_sites_batch(jobs) == peer.rank_sites_batch(jobs)
+        a = diana.select_sites_batch(jobs)
+        b = peer.select_sites_batch(jobs)
+        assert a.sites == b.sites
+        assert list(a.costs) == list(b.costs)
+
+
+class TestWorldView:
+    def test_receive_applies_only_newer_epochs(self):
+        rng = np.random.default_rng(0)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        col = p0._col[p1.home]
+        old_queue = p0.view.queue[col]
+
+        p1.authoritative[p1.home].queue_length = 555.0
+        p1.refresh_home(now=10.0)
+        adverts = p1.adverts()
+        assert p0.receive(adverts) >= 1
+        assert p0.view.queue[col] == 555.0
+        assert p0.version[col] == p1.version[col]
+
+        # Replaying the same (or an older) epoch must be a no-op.
+        p0.view.queue[col] = -1.0
+        assert p0.receive(adverts) == 0
+        assert p0.view.queue[col] == -1.0
+        assert old_queue != 555.0
+
+    def test_hearsay_never_overwrites_home(self):
+        rng = np.random.default_rng(1)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        home_col = p0._col[p0.home]
+        truth = p0.view.queue[home_col]
+        fake = SiteAdvert(site=p0.home, row=np.full(8, 7.0), alive=True,
+                          free_slots=1.0, version=10_000, stamp=99.0)
+        assert p0.receive([fake]) == 0
+        assert p0.view.queue[home_col] == truth
+
+    def test_unknown_site_adverts_ignored(self):
+        rng = np.random.default_rng(2)
+        sites, links = _grid(rng, 3, dead_fraction=0.0)
+        (p0,) = _peer_ring(sites, links, 1)
+        ghost = SiteAdvert(site="nope", row=np.zeros(8), alive=True,
+                           free_slots=0.0, version=1, stamp=0.0)
+        assert p0.receive([ghost]) == 0
+
+    def test_staleness_tracks_owner_stamp(self):
+        rng = np.random.default_rng(3)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        p1.refresh_home(now=50.0)
+        p0.receive(p1.adverts())
+        stale = p0.staleness(now=80.0)
+        for n in p0.home_names:
+            assert stale[p0._col[n]] == 0.0
+        for n in p1.home_names:
+            assert stale[p0._col[n]] == 30.0   # 80 − owner stamp 50, not receive time
+
+    def test_receive_keeps_own_path_measurements(self):
+        """Path quality (bw/loss/rtt/mss) is receiver-relative PingER
+        data: an applied advert updates the owner-authoritative fields
+        but must not overwrite the receiver's own link columns."""
+        rng = np.random.default_rng(16)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        c = p0._col[p1.home]
+        my_bw, my_rtt = p0.view.bw[c], p0.view.rtt[c]
+        # The owner advertises from its own link table — poison its row
+        # so any cross-contamination is visible.
+        p1.view.bw[p1._col[p1.home]] = 1.0
+        p1.authoritative[p1.home].queue_length = 777.0
+        p1.refresh_home(now=1.0)
+        assert p0.receive(p1.adverts()) >= 1
+        assert p0.view.queue[c] == 777.0           # owner field applied
+        assert p0.view.bw[c] == my_bw              # own path kept
+        assert p0.view.rtt[c] == my_rtt
+
+    def test_saturated_site_advertises_zero_free_slots(self):
+        """An explicit free_slots=0.0 (saturated) must survive the
+        SiteState constructor and travel the wire as 0.0 — a receiver
+        must not admit bulk groups at a site with no idle processors."""
+        sites = {
+            "a": SiteState(name="a", capacity=8.0, free_slots=0.0),
+            "b": SiteState(name="b", capacity=8.0),
+        }
+        assert sites["a"].free_slots == 0.0          # explicit zero kept
+        assert sites["b"].free_slots == 8.0          # unspecified → idle
+        links = {n: NetworkLink(bandwidth_Bps=1e9) for n in sites}
+        pa, pb = _peer_ring(sites, links, 2)
+        pa.refresh_home(now=1.0)
+        pb.receive(pa.adverts())
+        assert pb.view_states()["a"].free_slots == 0.0
+
+    def test_duplicate_adverts_keep_highest_epoch(self):
+        """One receive() batch may aggregate several senders' adverts
+        for the same site; the highest epoch must win regardless of
+        list order (fancy assignment is last-write-wins otherwise)."""
+        rng = np.random.default_rng(15)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        p1.authoritative[p1.home].queue_length = 100.0
+        p1.refresh_home(now=1.0)
+        old = p1.adverts(cols=[p1._col[p1.home]])
+        p1.authoritative[p1.home].queue_length = 200.0
+        p1.refresh_home(now=2.0)
+        new = p1.adverts(cols=[p1._col[p1.home]])
+        col = p0._col[p1.home]
+        assert p0.receive(new + old) == 1      # newer wins, older ignored
+        assert p0.view.queue[col] == 200.0
+        assert p0.version[col] == new[0].version
+
+    def test_speculative_rows_are_not_readvertised(self):
+        """Optimistic placement feedback onto a remote column is this
+        peer's belief, not the owner's measurement: it must not travel
+        under the owner's epoch, and the owner's next advert cleans it."""
+        rng = np.random.default_rng(14)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        remote = p1.home
+        c = p0._col[remote]
+        p0.note_remote_placement(remote, work=5.0)
+        assert p0._dirty[c]
+        assert remote not in {a.site for a in p0.adverts()}
+        # Home speculation is meaningless (truth on next refresh).
+        p0.note_remote_placement(p0.home, work=5.0)
+        assert not p0._dirty[p0._col[p0.home]]
+        # The owner's fresh epoch replaces the speculation and the row
+        # becomes advertisable hearsay again.
+        p1.refresh_home(now=1.0)
+        assert p0.receive(p1.adverts()) >= 1
+        assert not p0._dirty[c]
+        assert remote in {a.site for a in p0.adverts()}
+
+    def test_place_batch_marks_remote_choices_dirty(self):
+        sites = {
+            "a": SiteState(name="a", capacity=100.0, queue_length=400.0),
+            "b": SiteState(name="b", capacity=100.0),
+        }
+        links = {n: NetworkLink(bandwidth_Bps=1e9) for n in sites}
+        pa, _ = _peer_ring(sites, links, 2)
+        got = pa.place_batch([Job(user="u", compute_work=1.0)])
+        assert got.sites == ["b"]                      # remote choice
+        assert pa._dirty[pa._col["b"]]
+        assert "b" not in {a.site for a in pa.adverts()}
+
+    def test_stale_view_changes_placement_until_exchange(self):
+        """The staleness-induced placement difference: a peer that
+        hasn't heard about a flood keeps placing into it; one exchange
+        round diverts it — the quickstart §7 scenario."""
+        sites = {
+            "a": SiteState(name="a", capacity=100.0),
+            "b": SiteState(name="b", capacity=100.0, queue_length=1.0),
+        }
+        links = {n: NetworkLink(bandwidth_Bps=1e9) for n in sites}
+        pa, pb = _peer_ring(sites, links, 2)
+        # b's authoritative queue explodes; pa still sees the snapshot.
+        pb.authoritative["b"].queue_length = 500.0
+        job = lambda: Job(user="u", compute_work=1.0)
+        assert pa.place_batch([job()]).sites == ["a"]   # fills its own site
+        pa.view.queue[pa._col["a"]] = 400.0             # a looks busy locally
+        assert pa.place_batch([job()]).sites == ["b"]   # stale: b looks empty
+        GossipExchange([pa, pb]).round(now=1.0)
+        assert pa.place_batch([job()]).sites == ["a"]   # fresh: b is flooded
+
+
+class TestGossipExchange:
+    def test_full_mesh_converges_in_one_round(self):
+        rng = np.random.default_rng(4)
+        sites, links = _grid(rng, 6, dead_fraction=0.0)
+        peers = _peer_ring(sites, links, 3)
+        for p in peers:
+            for n in p.home_names:
+                p.authoritative[n].queue_length = 111.0
+        GossipExchange(peers).round(now=5.0)
+        for p in peers:
+            assert (p.view.queue == 111.0).all()
+
+    def test_latency_delays_application(self):
+        rng = np.random.default_rng(5)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        p0, p1 = _peer_ring(sites, links, 2)
+        p1.authoritative[p1.home].queue_length = 222.0
+        ex = GossipExchange([p0, p1], latency_s=10.0)
+        ex.round(now=0.0)
+        col = p0._col[p1.home]
+        assert p0.view.queue[col] != 222.0
+        assert ex.in_flight > 0
+        assert ex.next_due() == 10.0
+        ex.deliver_due(now=10.0)
+        assert p0.view.queue[col] == 222.0
+        assert ex.in_flight == 0
+
+    def test_hierarchy_fanout_routes_via_representatives(self):
+        """Two RootGrid tiers: a non-representative's row crosses tiers
+        only through the representatives — never in a single round."""
+        rng = np.random.default_rng(6)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        names = list(sites)
+        topo = GridTopology()
+        for n in names[:2]:
+            topo.join("east", Node(name=n))
+        for n in names[2:]:
+            topo.join("west", Node(name=n))
+        peers = [
+            PeerScheduler(home=n, sites=copy.deepcopy(sites), links=dict(links),
+                          home_sites=[n], order=names)
+            for n in names
+        ]
+        # Tier groups: {s0, s1} (east) and {s2, s3} (west); reps s0, s2.
+        ex = GossipExchange(peers, topology=topo)
+        assert set(ex.neighbors(1, rnd=1)) == {0}          # non-rep: own tier only
+        assert set(ex.neighbors(0, rnd=1)) == {1, 2}       # rep: tier + other reps
+        p3 = peers[3]
+        p3.authoritative[p3.home].queue_length = 333.0
+        col = peers[1]._col[p3.home]
+        ex.round(now=1.0)        # s3→s2 (hearsay lands at west rep + cascade)
+        ex.round(now=2.0)
+        ex.round(now=3.0)        # s2→s0→s1 cascades complete
+        assert peers[1].view.queue[col] == 333.0
+
+    def test_fanout_cap_rotates(self):
+        rng = np.random.default_rng(7)
+        sites, links = _grid(rng, 8, dead_fraction=0.0)
+        peers = _peer_ring(sites, links, 4)
+        ex = GossipExchange(peers, fanout=1)
+        seen = set()
+        for rnd in range(1, 5):
+            nbrs = ex.neighbors(0, rnd)
+            assert len(nbrs) == 1
+            seen.update(nbrs)
+        assert seen == {1, 2, 3}           # rotation covers every neighbor
+
+    def test_wire_bytes_accounting(self):
+        a = SiteAdvert(site="xy", row=np.zeros(8), alive=True,
+                       free_slots=1.0, version=1, stamp=0.0)
+        assert advert_wire_bytes(a) == 8 * 8 + 8 + 8 + 8 + 1 + 2
+
+
+class TestBulkRouting:
+    def _peers(self, rng, n_sites=6, n_peers=3):
+        sites, links = _grid(rng, n_sites, dead_fraction=0.0)
+        return _peer_ring(sites, links, n_peers)
+
+    def test_submit_site_routes_to_owning_peer(self):
+        peers = self._peers(np.random.default_rng(8))
+        g = BulkGroup(user="lisa", jobs=[Job(user="lisa")], group_id="g0",
+                      submit_site=peers[1].home_names[-1])
+        assert submitting_peer(g, peers) is peers[1]
+
+    def test_unknown_submit_site_hashes_stably(self):
+        peers = self._peers(np.random.default_rng(9))
+        g = BulkGroup(user="bart", jobs=[Job(user="bart")], group_id="g1",
+                      submit_site="not-a-site")
+        assert submitting_peer(g, peers) is submitting_peer(g, peers)
+
+    def test_route_groups_places_on_the_submitting_peers_view(self):
+        peers = self._peers(np.random.default_rng(10))
+        groups = [
+            BulkGroup(user=f"u{i}", group_id=f"g{i}", division_factor=2,
+                      submit_site=peers[i % len(peers)].home,
+                      jobs=[Job(user=f"u{i}", t=1.0) for _ in range(20)])
+            for i in range(4)
+        ]
+        routed = route_groups(groups, peers)
+        assert len(routed) == len(groups)
+        for (peer, placement), g in zip(routed, groups):
+            assert peer is submitting_peer(g, peers)
+            assert sum(len(js) for js in placement.assignments.values()) == g.size
+            assert all(j.site is not None for j in g.jobs)
+
+    def test_single_peer_group_matches_bulk_scheduler(self):
+        from repro.core import BulkScheduler
+
+        rng = np.random.default_rng(11)
+        sites, links = _grid(rng, 6, dead_fraction=0.0)
+        mk = lambda: BulkGroup(
+            user="u", group_id="g", division_factor=3,
+            jobs=[Job(user="u", t=1.0, compute_work=2.0) for _ in range(40)],
+        )
+        ref = BulkScheduler(
+            DianaScheduler(copy.deepcopy(sites), dict(links))
+        ).schedule_group(mk())
+        peer = single_peer(copy.deepcopy(sites), dict(links))
+        got = peer.schedule_group(mk())
+        assert ref.split == got.split
+        assert {s: len(js) for s, js in ref.assignments.items()} == {
+            s: len(js) for s, js in got.assignments.items()
+        }
+
+
+class TestPeerSchedulerValidation:
+    def test_home_must_be_in_home_sites(self):
+        rng = np.random.default_rng(12)
+        sites, links = _grid(rng, 3, dead_fraction=0.0)
+        names = list(sites)
+        with pytest.raises(ValueError):
+            PeerScheduler(home=names[0], sites=sites, links=links,
+                          home_sites=[names[1]])
+
+    def test_unknown_home_site_raises(self):
+        rng = np.random.default_rng(13)
+        sites, links = _grid(rng, 3, dead_fraction=0.0)
+        with pytest.raises(KeyError):
+            PeerScheduler(home="ghost", sites=sites, links=links)

@@ -4,7 +4,15 @@ import copy
 import numpy as np
 import pytest
 
-from repro.sim import GridSim, SimJob, bulk_burst, paper_grid_spec, uniform_links
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.sim import (
+    GridSim, P2PGridSim, SimJob, bulk_burst, paper_grid_spec, uniform_links,
+)
 
 
 def _run(policy, jobs, nodes=None, **kw):
@@ -262,6 +270,222 @@ class TestArrivalBatchFastPath:
         assert [j.exec_site for j in res.jobs] == [j.exec_site for j in seq.jobs]
 
 
+class TestLinkInvalidationProperty:
+    """Satellite of the PR 4 static-plane cache tests: ANY link-table
+    mutation (setter or in-place + invalidate_links) followed by a
+    placement must be bit-identical to a sim rebuilt from scratch
+    against the same table — no stale derived plane may survive."""
+
+    def _random_links(self, names, rng):
+        links = {}
+        for a in names:
+            for b in names:
+                if a == b:
+                    links[(a, b)] = uniform_links([a])[(a, a)]
+                else:
+                    links[(a, b)] = uniform_links(
+                        [a, b],
+                        bandwidth_Bps=float(rng.uniform(1e8, 5e9)),
+                        loss_rate=float(rng.uniform(1e-4, 0.02)),
+                    )[(a, b)]
+        return links
+
+    def _batch(self, names, rng, n=25):
+        jobs = []
+        for i in range(n):
+            jobs.extend(
+                bulk_burst(f"u{i % 3}", 1, at=0.0,
+                           work=float(rng.uniform(5, 200)),
+                           input_bytes=float(rng.uniform(0, 5e9)),
+                           output_bytes=float(rng.uniform(0, 5e8)),
+                           data_site=names[int(rng.integers(len(names)))],
+                           origin_site=names[int(rng.integers(len(names)))])
+            )
+        return jobs
+
+    @given(seed=st.integers(0, 10_000), via_setter=st.booleans())
+    @settings(max_examples=15, deadline=None)
+    def test_placement_after_invalidation_matches_fresh_sim(self, seed, via_setter):
+        rng = np.random.default_rng(seed)
+        nodes = paper_grid_spec()
+        names = sorted(nodes)
+        sim = GridSim(nodes, policy="diana")
+        # Warm every derived plane: dense matrices + memoized rows.
+        sim.choose_sites_batch(self._batch(names, rng))
+        assert sim._static_row_cache
+
+        new_links = self._random_links(names, rng)
+        if via_setter:
+            sim.links = new_links
+        else:
+            # In-place mutation: the dict object keeps its identity, so
+            # only invalidate_links() can drop the derived planes.
+            sim.links.clear()
+            sim.links.update(new_links)
+            sim.invalidate_links()
+        assert not sim._static_row_cache
+        probe = self._batch(names, rng)
+        fresh = GridSim(nodes, links=dict(new_links), policy="diana")
+        assert sim.choose_sites_batch(copy.deepcopy(probe)) == \
+            fresh.choose_sites_batch(copy.deepcopy(probe))
+
+
+class TestP2PGridSim:
+    """Multi-scheduler mode: the 1-peer special case is the omniscient
+    sim, N peers complete the workload deterministically, and stale
+    views cost (bounded) placement quality."""
+
+    def _workload(self, n=80, seed=0):
+        rng = np.random.default_rng(seed)
+        names = sorted(paper_grid_spec())
+        jobs = []
+        for i in range(n):
+            jobs.extend(
+                bulk_burst(f"u{i % 4}", 2, at=float(i * 4),
+                           work=float(rng.uniform(30, 120)),
+                           input_bytes=0.0, output_bytes=0.0, data_site=None,
+                           origin_site=names[int(rng.integers(len(names)))],
+                           rng=rng, work_jitter=0.2)
+            )
+        return sorted(jobs, key=lambda j: j.arrival)
+
+    @pytest.mark.parametrize("interval", [30.0, 600.0])
+    def test_single_peer_is_bit_identical_to_omniscient(self, interval):
+        jobs = self._workload()
+        base = GridSim(paper_grid_spec(), policy="diana").run(copy.deepcopy(jobs))
+        one = P2PGridSim(paper_grid_spec(), num_peers=1,
+                         exchange_interval_s=interval).run(copy.deepcopy(jobs))
+        assert [j.exec_site for j in base.jobs] == [j.exec_site for j in one.jobs]
+        assert [j.start for j in base.jobs] == [j.start for j in one.jobs]
+        assert [j.finish for j in base.jobs] == [j.finish for j in one.jobs]
+        assert base.timeline == one.timeline
+
+    def test_multi_peer_completes_and_is_deterministic(self):
+        jobs = self._workload()
+        runs = []
+        for _ in range(2):
+            sim = P2PGridSim(paper_grid_spec(), num_peers=3,
+                             exchange_interval_s=60.0, exchange_latency_s=5.0)
+            runs.append(sim.run(copy.deepcopy(jobs)))
+            assert all(j.finish >= 0 for j in runs[-1].jobs)
+            assert sim.exchange.stats.rounds > 0
+            assert sim.exchange.stats.adverts_sent > 0
+        assert [j.exec_site for j in runs[0].jobs] == [j.exec_site for j in runs[1].jobs]
+        assert [j.finish for j in runs[0].jobs] == [j.finish for j in runs[1].jobs]
+
+    def test_peers_partition_all_sites(self):
+        sim = P2PGridSim(paper_grid_spec(), num_peers=3)
+        owned = [n for p in sim.peers for n in p.home_names]
+        assert sorted(owned) == sorted(paper_grid_spec())
+        assert len(sim.peers) == 3
+
+    def test_migration_respects_staleness_trust(self):
+        """With an exchange interval (hence trust horizon) far shorter
+        than the time between exchanges, congested sites must not
+        migrate — they don't trust any peer row."""
+        jobs = _overload_workload()
+        trusting = P2PGridSim(paper_grid_spec(), num_peers=5,
+                              exchange_interval_s=30.0, quotas=QUOTAS,
+                              migration_interval_s=30.0,
+                              congestion_window_s=120.0)
+        res_trusting = trusting.run(copy.deepcopy(jobs))
+        paranoid = P2PGridSim(paper_grid_spec(), num_peers=5,
+                              exchange_interval_s=30.0, quotas=QUOTAS,
+                              migration_interval_s=30.0,
+                              congestion_window_s=120.0,
+                              migration_max_staleness_s=-1.0)
+        res_paranoid = paranoid.run(copy.deepcopy(jobs))
+        assert res_trusting.migrations() > 0
+        assert res_paranoid.migrations() == 0
+        assert all(j.finish >= 0 for j in res_paranoid.jobs)
+
+    def test_non_diana_policy_rejected(self):
+        with pytest.raises(ValueError):
+            P2PGridSim(paper_grid_spec(), policy="greedy")
+
+    def test_topology_default_trust_allows_cross_tier_migration(self):
+        """Tiered fan-out relays cross-tier rows through representatives
+        (up to ~3 rounds old on arrival): the default trust horizon must
+        account for the extra hops, or cross-tier migration silently
+        never happens."""
+        from repro.core import GridTopology, Node
+
+        names = sorted(paper_grid_spec())
+        topo = GridTopology()
+        for n in names[:2]:
+            topo.join("east", Node(name=n))
+        for n in names[2:]:
+            topo.join("west", Node(name=n))
+        sim = P2PGridSim(paper_grid_spec(), num_peers=5, topology=topo,
+                         exchange_interval_s=30.0, quotas=QUOTAS,
+                         migration_interval_s=30.0, congestion_window_s=120.0)
+        assert sim.migration_max_staleness_s >= 4 * 30.0
+        res = sim.run(copy.deepcopy(_overload_workload()))
+        assert res.migrations() > 0
+        # ...and the hog flood at site1 (east) reached a west-tier site.
+        west = set(names[2:])
+        assert any(j.migrated and j.exec_site in west for j in res.jobs)
+
+    def test_choose_sites_batch_matches_choose_site(self):
+        """The vectorized snapshot API must agree with per-job
+        choose_site under the per-peer stale views."""
+        jobs = self._workload(30)
+        sim = P2PGridSim(paper_grid_spec(), num_peers=3, exchange_interval_s=60.0)
+        assert sim.choose_sites_batch(jobs) == [sim.choose_site(sj) for sj in jobs]
+
+    def test_late_start_trace_does_not_distrust_bootstrap(self):
+        """A trace resuming at large t0 must treat the construction
+        snapshot as exchanged at sim start: migration stays enabled in
+        the window before the first exchange round."""
+        t0 = 86_400.0
+        jobs = [SimJob(user=("hog" if i >= 8 else "polite"), arrival=t0 + i,
+                       work=300.0, input_bytes=2e9, data_site="site1",
+                       origin_site="site1")
+                for i in range(80)]
+        sim = P2PGridSim(paper_grid_spec(), num_peers=5,
+                         exchange_interval_s=600.0, quotas=QUOTAS,
+                         migration_interval_s=30.0, congestion_window_s=120.0)
+        res = sim.run(copy.deepcopy(jobs))
+        assert all(j.finish >= 0 for j in res.jobs)
+        assert res.migrations() > 0          # not silently disabled
+
+    def test_fanout_cap_widens_default_trust(self):
+        sim = P2PGridSim(paper_grid_spec(), num_peers=5, gossip_fanout=1,
+                         exchange_interval_s=60.0)
+        # neighbors rotate over 4 peers at 1/round → heard every 4
+        # rounds → horizon (1+4)·60.
+        assert sim.migration_max_staleness_s == 5 * 60.0
+
+    def test_peer_links_are_home_relative(self):
+        """sim.peers' public cost planes run on each peer's real
+        home-relative link row, not a placeholder."""
+        sim = P2PGridSim(paper_grid_spec(), num_peers=2)
+        p = sim.peers[0]
+        for n in sim._names_sorted:
+            assert p.links[n] is sim.links[(p.home, n)]
+
+    def test_all_sent_adverts_are_delivered(self):
+        """Latency > interval keeps several batches airborne at once;
+        deliver events must chain so nothing stays in flight forever."""
+        jobs = self._workload(40)
+        sim = P2PGridSim(paper_grid_spec(), num_peers=3,
+                         exchange_interval_s=30.0, exchange_latency_s=100.0)
+        res = sim.run(copy.deepcopy(jobs))
+        assert all(j.finish >= 0 for j in res.jobs)
+        assert sim.exchange.in_flight == 0
+        assert sim.exchange.stats.deliveries > 0
+
+    def test_exchange_cost_scales_down_with_interval(self):
+        jobs = self._workload()
+        sent = []
+        for iv in (30.0, 240.0):
+            sim = P2PGridSim(paper_grid_spec(), num_peers=3,
+                             exchange_interval_s=iv)
+            sim.run(copy.deepcopy(jobs))
+            sent.append(sim.exchange.stats.adverts_sent)
+        assert sent[1] < sent[0]
+
+
 class TestBatchedMigration:
     """The batched §IX/§X migration pass must be bit-identical to the
     sequential per-job loop: same targets, same export/import buckets,
@@ -346,3 +570,25 @@ class TestBatchedMigration:
 
     def test_batched_is_default(self):
         assert GridSim(paper_grid_spec(), policy="diana").batch_migration
+
+    @pytest.mark.parametrize("interval,latency", [(30.0, 0.0), (60.0, 5.0)])
+    def test_p2p_staleness_equivalence(self, interval, latency):
+        """The batched migration pass must stay bit-identical to the
+        per-job loop WITH the P2P staleness gating active: both paths
+        filter trusted peers from the same per-column stale vector."""
+        jobs = _overload_workload()
+        runs = []
+        for batched in (False, True):
+            sim = P2PGridSim(paper_grid_spec(), num_peers=5,
+                             exchange_interval_s=interval,
+                             exchange_latency_s=latency,
+                             batch_migration=batched, quotas=QUOTAS,
+                             migration_interval_s=30.0,
+                             congestion_window_s=120.0)
+            runs.append(sim.run(copy.deepcopy(jobs)))
+        seq, bat = runs
+        assert [j.exec_site for j in seq.jobs] == [j.exec_site for j in bat.jobs]
+        assert [j.migrated for j in seq.jobs] == [j.migrated for j in bat.jobs]
+        assert [j.finish for j in seq.jobs] == [j.finish for j in bat.jobs]
+        assert seq.timeline == bat.timeline
+        assert bat.migrations() > 0
