@@ -8,7 +8,9 @@ decentralization (paper §III/§IX):
 * placement-quality degradation — makespan (and turnaround) relative
   to the omniscient scheduler, growing with view staleness;
 * exchange cost — advertised rows / bytes on the wire, shrinking with
-  the exchange interval.
+  the exchange interval. Each interval runs under both wire formats
+  (``full`` flood vs the delta-compressed default), so the record
+  reports the bytes reduction and the delta-vs-full makespan ratio.
 
 The workload is queue-dominated (no data gravity) on a
 capacity-heterogeneous grid, so placement quality hinges on how fresh
@@ -93,42 +95,58 @@ def bench(
         "intervals": [],
     }
     for iv in intervals:
-        sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=iv,
-                         exchange_latency_s=latency_s)
-        t0 = time.perf_counter()
-        res = sim.run(copy.deepcopy(workload))
-        run_s = time.perf_counter() - t0
-        stats = sim.exchange.stats
-        rec["intervals"].append({
-            "exchange_interval_s": iv,
-            "makespan": round(res.makespan, 1),
-            "makespan_degradation": round(res.makespan / base.makespan, 4),
-            "avg_turnaround": round(res.avg_turnaround, 1),
-            "turnaround_degradation": round(
-                res.avg_turnaround / base.avg_turnaround, 4
-            ),
-            "migrations": res.migrations(),
-            "exchange_rounds": stats.rounds,
-            "adverts_sent": stats.adverts_sent,
-            "bytes_sent": stats.bytes_sent,
-            "run_s": round(run_s, 2),
-        })
+        row: dict = {"exchange_interval_s": iv}
+        for wire in ("full", "delta"):
+            sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=iv,
+                             exchange_latency_s=latency_s, gossip_wire=wire)
+            t0 = time.perf_counter()
+            res = sim.run(copy.deepcopy(workload))
+            run_s = time.perf_counter() - t0
+            stats = sim.exchange.stats
+            row[wire] = {
+                "makespan": round(res.makespan, 1),
+                "makespan_degradation": round(res.makespan / base.makespan, 4),
+                "avg_turnaround": round(res.avg_turnaround, 1),
+                "turnaround_degradation": round(
+                    res.avg_turnaround / base.avg_turnaround, 4
+                ),
+                "migrations": res.migrations(),
+                "exchange_rounds": stats.rounds,
+                "adverts_sent": stats.adverts_sent,
+                "bytes_sent": stats.bytes_sent,
+                "heartbeats_sent": stats.heartbeats_sent,
+                "acks_sent": stats.acks_sent,
+                "full_syncs": stats.full_syncs,
+                "run_s": round(run_s, 2),
+            }
+        row["bytes_reduction"] = round(
+            row["full"]["bytes_sent"] / max(1, row["delta"]["bytes_sent"]), 1
+        )
+        row["delta_vs_full_makespan"] = round(
+            row["delta"]["makespan"] / row["full"]["makespan"], 4
+        )
+        rec["intervals"].append(row)
     return rec
 
 
 def smoke(sites: int, peers: int, jobs: int, seed: int = 0) -> dict:
     """CI smoke: the 1-peer special case must be bit-identical to the
-    omniscient scheduler, and the N-peer run must complete every job."""
+    omniscient scheduler — under *both* wire formats (quantization and
+    delta suppression must never touch placement when every site is
+    home) — and the N-peer compressed run must complete every job."""
     nodes = _grid(sites)
     workload = _workload(sorted(nodes), jobs, seed)
     base = GridSim(nodes, policy="diana").run(copy.deepcopy(workload))
-    one = P2PGridSim(nodes, num_peers=1, exchange_interval_s=60.0).run(
-        copy.deepcopy(workload)
-    )
-    if [j.exec_site for j in base.jobs] != [j.exec_site for j in one.jobs] or [
-        j.finish for j in base.jobs
-    ] != [j.finish for j in one.jobs]:
-        raise AssertionError("single-peer P2P sim diverged from the omniscient GridSim")
+    for wire in ("full", "delta"):
+        one = P2PGridSim(nodes, num_peers=1, exchange_interval_s=60.0,
+                         gossip_wire=wire).run(copy.deepcopy(workload))
+        if [j.exec_site for j in base.jobs] != [
+            j.exec_site for j in one.jobs
+        ] or [j.finish for j in base.jobs] != [j.finish for j in one.jobs]:
+            raise AssertionError(
+                f"single-peer P2P sim (wire={wire}) diverged from the "
+                "omniscient GridSim"
+            )
     sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=120.0,
                      exchange_latency_s=2.0)
     res = sim.run(copy.deepcopy(workload))
@@ -140,14 +158,15 @@ def smoke(sites: int, peers: int, jobs: int, seed: int = 0) -> dict:
         "single_peer_identical": True,
         "makespan_degradation": round(res.makespan / base.makespan, 4),
         "adverts_sent": sim.exchange.stats.adverts_sent,
+        "bytes_sent": sim.exchange.stats.bytes_sent,
     }
 
 
 def run() -> dict:
     """Reduced size for the aggregate harness."""
     rec = bench(sites=32, peers=4, jobs=800, intervals=(30.0, 120.0, 480.0))
-    worst = max(iv["makespan_degradation"] for iv in rec["intervals"])
-    emit("p2p_makespan_degradation", rec["intervals"][0]["run_s"] * 1e6,
+    worst = max(iv["delta"]["makespan_degradation"] for iv in rec["intervals"])
+    emit("p2p_makespan_degradation", rec["intervals"][0]["delta"]["run_s"] * 1e6,
          f"worst={worst}x over {rec['sites']} sites x {rec['peers']} peers")
     return rec
 

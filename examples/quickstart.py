@@ -141,6 +141,25 @@ print(f"\nP2P (3 peers): A's stale view placed at {stale_pick!r}; "
 staleness = peers["A"].staleness(now=60.0)
 print("A's per-row staleness at t=60:",
       {n: float(staleness[i]) for i, n in enumerate(peers['A'].view.names)})
+
+# The exchange above ran the delta-compressed wire (the default): the
+# first round is a full sync that negotiates each pair's interned
+# site-id table; afterwards a round ships only the columns whose epoch
+# advanced since the receiver last acknowledged — quantized to f32
+# (quant="f16" opts into half precision), with tiny heartbeats keeping
+# unchanged rows' staleness fresh. wire="full" is the uncompressed
+# everything-every-round flood:
+for wire in ("full", "delta"):
+    wpeers = [PeerScheduler(home=n, sites=dict(p2p_sites), links=dict(p2p_links))
+              for n in p2p_sites]
+    wex = GossipExchange(wpeers, wire=wire)
+    for rnd in range(8):                       # steady state: nothing changes
+        wex.round(now=60.0 * rnd)
+    s = wex.stats
+    print(f"wire={wire:5s}: {s.bytes_sent:6d} B over {s.rounds} rounds "
+          f"({s.adverts_sent} adverts, {s.heartbeats_sent} heartbeats, "
+          f"{s.full_syncs} full syncs)")
 # The same protocol drives the simulator at scale: see
-# repro.sim.P2PGridSim and benchmarks/p2p_bench.py (makespan vs the
-# omniscient single scheduler as a function of exchange interval).
+# repro.sim.P2PGridSim (gossip_wire=/gossip_quant=) and
+# benchmarks/p2p_bench.py (bytes + makespan, compressed vs
+# uncompressed, as a function of exchange interval).

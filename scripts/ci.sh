@@ -18,7 +18,10 @@ fi
 # Bench smoke: sequential-vs-batched migration must stay bit-identical
 # at toy size (asserts inside the bench; no JSON written).
 python benchmarks/migration_bench.py --jobs 100 --sites 16 --smoke
-# P2P smoke: the 1-peer/zero-staleness multi-scheduler sim must be
-# bit-identical to the omniscient GridSim, and a 3-peer exchange run
-# must complete every job (asserts inside the bench; no JSON written).
+# Compressed-P2P smoke (16 sites × 3 peers): the 1-peer/zero-staleness
+# multi-scheduler sim must be bit-identical to the omniscient GridSim
+# under BOTH wire formats — delta compression and f32 quantization must
+# never touch placement when every site is home — and a 3-peer
+# delta-wire run must complete every job (asserts inside the bench; no
+# JSON written).
 python benchmarks/p2p_bench.py --sites 16 --peers 3 --jobs 200 --smoke

@@ -55,10 +55,14 @@ from .batch import (
 )
 from .engine import PlacementEngine
 from .p2p import (
+    ACK_WIRE_BYTES,
+    QUANT_FIELDS,
     ExchangeStats,
     GossipExchange,
     PeerScheduler,
     SiteAdvert,
+    decode_packet,
+    encode_packet,
     single_peer,
 )
 
@@ -82,4 +86,5 @@ __all__ = [
     "PlacementEngine",
     "ExchangeStats", "GossipExchange", "PeerScheduler", "SiteAdvert",
     "single_peer",
+    "ACK_WIRE_BYTES", "QUANT_FIELDS", "decode_packet", "encode_packet",
 ]

@@ -368,6 +368,7 @@ def merge_packed_rows(
     alive: Optional[np.ndarray] = None,
     protect: Optional[np.ndarray] = None,
     fields: Optional[Sequence[str]] = None,
+    reclaim: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Merge advertised (8, k) ``rows`` into pack columns ``cols``,
     keeping only strictly newer epochs.
@@ -377,19 +378,39 @@ def merge_packed_rows(
     ``protect`` marks columns the receiver owns authoritatively (its
     home sites) — hearsay never overwrites those. ``fields`` restricts
     which packed fields an applied column overwrites (see
-    ``SitePack.set_columns``). Returns the (k,) bool mask of applied
-    columns.
+    ``SitePack.set_columns``) — the P2P layer passes dequantized f32/f16
+    owner fields here; versions stay exact int64 so quantization never
+    weakens the strictly-newer invariant. Returns the (k,) bool mask of
+    applied columns.
+
+    Epochs advance only when the owner's measured state changed, so two
+    refinements keep unchanged-but-re-measured rows fresh:
+
+    * an advert carrying the *same* epoch with a strictly newer owner
+      stamp refreshes ``stamp`` in place (content is identical by the
+      one-owner-per-epoch invariant) without counting as applied;
+    * ``reclaim`` marks columns whose content the receiver has
+      speculatively modified (optimistic placement feedback): an
+      equal-epoch owner advert re-applies the canonical content there,
+      reverting the speculation, and does count as applied.
     """
     cols = np.asarray(cols, np.int64)
     new_version = np.asarray(new_version, np.int64)
+    new_stamp = np.asarray(new_stamp, np.float64)
     if len(np.unique(cols)) != len(cols):
         # Duplicate columns in one batch (adverts aggregated from
         # several senders): fancy assignment is last-write-wins, which
-        # could roll a newer epoch back to an older duplicate. Keep
-        # only the highest epoch per column; the losers report False.
+        # could roll a newer epoch back to an older duplicate. Keep the
+        # highest (epoch, stamp) per column — the stamp tie-break makes
+        # the merge independent of advert order when two senders relay
+        # the same epoch but one heard a fresher re-measurement; the
+        # losers report False.
         winner: dict[int, int] = {}
         for k, c in enumerate(cols):
-            if c not in winner or new_version[k] > new_version[winner[c]]:
+            w = winner.get(c)
+            if w is None or (new_version[k], new_stamp[k]) > (
+                new_version[w], new_stamp[w]
+            ):
                 winner[c] = int(k)
         keep = np.zeros(len(cols), bool)
         keep[list(winner.values())] = True
@@ -398,26 +419,38 @@ def merge_packed_rows(
             sp, version, stamp, cols[keep],
             np.asarray(rows, np.float64)[:, keep],
             new_version[keep],
-            np.asarray(new_stamp, np.float64)[keep],
+            new_stamp[keep],
             None if alive is None else np.asarray(alive, bool)[keep],
             protect,
             fields,
+            reclaim,
         )
         return out
-    newer = new_version > version[cols]
+    unprotected = np.ones(len(cols), bool)
     if protect is not None:
-        newer &= ~np.asarray(protect, bool)[cols]
-    if newer.any():
-        take = cols[newer]
+        unprotected = ~np.asarray(protect, bool)[cols]
+    newer = (new_version > version[cols]) & unprotected
+    equal = (new_version == version[cols]) & unprotected
+    apply = newer
+    if reclaim is not None:
+        apply = newer | (equal & np.asarray(reclaim, bool)[cols])
+    if apply.any():
+        take = cols[apply]
         sp.set_columns(
             take,
-            np.asarray(rows, np.float64)[:, newer],
-            None if alive is None else np.asarray(alive, bool)[newer],
+            np.asarray(rows, np.float64)[:, apply],
+            None if alive is None else np.asarray(alive, bool)[apply],
             fields,
         )
-        version[take] = np.asarray(new_version, np.int64)[newer]
-        stamp[take] = np.asarray(new_stamp, np.float64)[newer]
-    return newer
+        version[take] = new_version[apply]
+        stamp[take] = np.maximum(stamp[take], new_stamp[apply])
+    # Same epoch, fresher owner clock: the owner re-measured and found
+    # nothing changed — refresh the stamp so staleness() doesn't decay
+    # rows that are merely *stable*.
+    touch = equal & ~apply & (new_stamp > stamp[cols])
+    if touch.any():
+        stamp[cols[touch]] = new_stamp[touch]
+    return apply
 
 
 # ---------------------------------------------------------------------------

@@ -91,12 +91,21 @@ def allocate_proportional(
     """Split ``num_jobs`` across the ``min(num_subgroups, #sites)`` most
     capable sites, proportionally to capacity (paper Fig 4 policy).
 
-    Largest-remainder rounding keeps the total exact.
+    Largest-remainder rounding keeps the total exact. A fully drained
+    grid (the chosen sites' total capacity is 0 — every candidate
+    drained or administratively zeroed) falls back to an even split
+    across the chosen sites instead of dividing by zero; no sites at
+    all is a caller error.
     """
+    if not capacities:
+        raise ValueError("allocate_proportional: no sites to allocate across")
     k = min(num_subgroups, len(capacities))
     chosen = sorted(capacities.items(), key=lambda kv: -kv[1])[:k]
     total_cap = sum(c for _, c in chosen)
-    raw = {name: num_jobs * cap / total_cap for name, cap in chosen}
+    if total_cap <= 0:
+        raw = {name: num_jobs / len(chosen) for name, _ in chosen}
+    else:
+        raw = {name: num_jobs * cap / total_cap for name, cap in chosen}
     alloc = {name: int(math.floor(v)) for name, v in raw.items()}
     remainder = num_jobs - sum(alloc.values())
     # Largest fractional remainders get the leftover jobs.

@@ -33,11 +33,32 @@ Delivery latency models the WAN: adverts sent at t arrive at
 t+latency, so a receiver's ``staleness`` of a remote row is
 (now − stamp) — the knob Q4 migration uses to decide which peers it
 still trusts (``select_peers_batch(..., staleness=, max_staleness=)``).
+
+Two wire formats drive the exchange (the DIANA P2P deployment papers,
+arXiv 0707.0862 / 0707.0743, require peer information exchange to
+scale with *change rate* and tier size, not S² full-state floods):
+
+* ``wire="full"`` — the original protocol: every round every peer
+  re-advertises every full (8,) float64 row it knows (~90 B/site).
+* ``wire="delta"`` (default) — the compressed protocol. Epochs open
+  only when an owner's measured state actually *changed*, each sender
+  keeps a per-receiver last-acked version vector and sends only the
+  columns whose epoch advanced since that receiver acknowledged
+  (acks ride the same latency-delayed heap), the dynamic owner fields
+  (queue/work/load/free_slots) travel quantized to f32 — f16 opt-in —
+  while epochs stay exact int64, and site names are interned into a
+  per-pair id table sent once (uint16/uint32 column ids afterwards;
+  a periodic full sync re-sends the table for new/rejoining peers).
+  Unchanged-but-re-measured columns ship as tiny heartbeats (id +
+  epoch echo + stamp) so ``staleness`` doesn't decay rows that are
+  merely stable, and hearsay a receiver provably hears owner-direct
+  in the fan-out schedule is suppressed entirely.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import struct
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -58,12 +79,16 @@ from .topology import GridTopology
 
 __all__ = [
     "OWNER_FIELDS",
+    "QUANT_FIELDS",
     "SiteAdvert",
     "ExchangeStats",
     "PeerScheduler",
     "GossipExchange",
     "single_peer",
     "advert_wire_bytes",
+    "encode_packet",
+    "decode_packet",
+    "ACK_WIRE_BYTES",
 ]
 
 # The advertised fields a receiver actually merges. The wire row
@@ -71,6 +96,13 @@ __all__ = [
 # *receiver-relative* PingER measurement — the owner's values describe
 # its own paths, so applying them would corrupt the receiver's view.
 OWNER_FIELDS = ("cap", "queue", "work", "load")
+
+# The *dynamic* owner fields the delta wire quantizes and ships
+# (``free_slots`` rides alongside, outside the pack). ``cap`` is
+# static after construction (``refresh_dynamic`` never re-reads it and
+# every peer bootstraps from the full site dict), so it stays off the
+# compressed wire entirely.
+QUANT_FIELDS = ("queue", "work", "load")
 
 
 @dataclass(frozen=True)
@@ -96,13 +128,24 @@ def advert_wire_bytes(advert: SiteAdvert) -> int:
 
 @dataclass
 class ExchangeStats:
-    """Counters for the exchange cost the p2p bench reports."""
+    """Counters for the exchange cost the p2p bench reports.
+
+    ``bytes_sent`` is accounted from *real serialized sizes*: the delta
+    wire counts ``len(payload)`` of each encoded packet plus
+    ``ACK_WIRE_BYTES`` per acknowledgement; the full wire counts
+    ``advert_wire_bytes`` per advert. ``adverts_sent`` counts advertised
+    columns (full rows or delta entries); heartbeats and full syncs are
+    broken out separately.
+    """
 
     rounds: int = 0
     adverts_sent: int = 0
     adverts_applied: int = 0
     bytes_sent: int = 0
     deliveries: int = 0
+    heartbeats_sent: int = 0
+    acks_sent: int = 0
+    full_syncs: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -111,7 +154,150 @@ class ExchangeStats:
             "adverts_applied": self.adverts_applied,
             "bytes_sent": self.bytes_sent,
             "deliveries": self.deliveries,
+            "heartbeats_sent": self.heartbeats_sent,
+            "acks_sent": self.acks_sent,
+            "full_syncs": self.full_syncs,
         }
+
+
+# ---------------------------------------------------------------------------
+# Delta wire format: encode/decode one sender→receiver packet.
+# ---------------------------------------------------------------------------
+
+#: Serialized acknowledgement size: 2 B magic + u16 sender + u64 packet
+#: seq + u32 pad — acks carry no column data, only "I have everything
+#: packet <seq> advertised", so the sender can advance its per-receiver
+#: acked version vector.
+ACK_WIRE_BYTES = 16
+
+_WIRE_MAGIC = b"DG"
+_WIRE_VERSION = 1
+_FLAG_TABLE = 1       # packet carries the interned site-id table
+_FLAG_F16 = 2         # quantized payload is float16 (default float32)
+_FLAG_WIDE_IDS = 4    # column ids are uint32 (>65535 sites)
+_QUANT_DTYPES = {"f32": np.float32, "f16": np.float16}
+_HEADER = struct.Struct("<BBIII")  # version, flags, n_table, n_delta, n_hb
+
+
+def encode_packet(
+    names: Sequence[str],
+    ids: np.ndarray,
+    qrows: np.ndarray,
+    free: np.ndarray,
+    alive: np.ndarray,
+    versions: np.ndarray,
+    stamps: np.ndarray,
+    hb_ids: np.ndarray,
+    hb_versions: np.ndarray,
+    hb_stamps: np.ndarray,
+    *,
+    quant: str = "f32",
+    include_table: bool = False,
+) -> bytes:
+    """Serialize one delta packet.
+
+    ``names`` is the sender's canonical column table (ids are indices
+    into it); it travels on the wire only when ``include_table`` (the
+    once-per-pair negotiation, re-sent by periodic full syncs so a
+    rejoining peer can resynchronize). The delta section carries, per
+    advertised column: its interned id, the exact int64 epoch, the f64
+    owner stamp, one alive bit, and the ``QUANT_FIELDS`` + free_slots
+    payload quantized to ``quant``. The heartbeat section carries
+    (id, epoch echo, stamp) triplets for unchanged columns.
+    """
+    dtype = _QUANT_DTYPES[quant]
+    wide = len(names) > 0xFFFF
+    id_dt = np.uint32 if wide else np.uint16
+    flags = (
+        (_FLAG_TABLE if include_table else 0)
+        | (_FLAG_F16 if quant == "f16" else 0)
+        | (_FLAG_WIDE_IDS if wide else 0)
+    )
+    n = len(ids)
+    qrows = np.asarray(qrows, np.float64)
+    if qrows.shape != (len(QUANT_FIELDS), n):
+        raise ValueError(
+            f"qrows must be ({len(QUANT_FIELDS)}, {n}), got {qrows.shape}"
+        )
+    parts = [
+        _WIRE_MAGIC,
+        _HEADER.pack(
+            _WIRE_VERSION, flags,
+            len(names) if include_table else 0, n, len(hb_ids),
+        ),
+    ]
+    if include_table:
+        for name in names:
+            b = name.encode("utf-8")
+            if len(b) > 255:
+                raise ValueError(f"site name too long for wire: {name!r}")
+            parts.append(struct.pack("<B", len(b)))
+            parts.append(b)
+    parts += [
+        np.ascontiguousarray(ids, id_dt).tobytes(),
+        np.ascontiguousarray(versions, np.int64).tobytes(),
+        np.ascontiguousarray(stamps, np.float64).tobytes(),
+        np.ascontiguousarray(qrows, dtype).tobytes(),
+        np.ascontiguousarray(free, dtype).tobytes(),
+        np.packbits(np.asarray(alive, bool)).tobytes(),
+        np.ascontiguousarray(hb_ids, id_dt).tobytes(),
+        np.ascontiguousarray(hb_versions, np.int64).tobytes(),
+        np.ascontiguousarray(hb_stamps, np.float64).tobytes(),
+    ]
+    return b"".join(parts)
+
+
+def decode_packet(buf: bytes) -> dict:
+    """Inverse of ``encode_packet``. Quantized fields come back as
+    float64 (dequantized); epochs come back exactly. Returns a dict
+    with ``table`` (list of names, or None when the packet carried no
+    table), the delta arrays and the heartbeat arrays."""
+    if buf[:2] != _WIRE_MAGIC:
+        raise ValueError("not a delta-wire packet (bad magic)")
+    ver, flags, n_table, n, n_hb = _HEADER.unpack_from(buf, 2)
+    if ver != _WIRE_VERSION:
+        raise ValueError(f"unsupported wire version {ver}")
+    off = 2 + _HEADER.size
+    table: Optional[list[str]] = None
+    if flags & _FLAG_TABLE:
+        table = []
+        for _ in range(n_table):
+            ln = buf[off]
+            off += 1
+            table.append(buf[off : off + ln].decode("utf-8"))
+            off += ln
+    id_dt = np.uint32 if flags & _FLAG_WIDE_IDS else np.uint16
+    dtype = np.float16 if flags & _FLAG_F16 else np.float32
+
+    def take(dt, count, shape=None):
+        nonlocal off
+        dt = np.dtype(dt)
+        out = np.frombuffer(buf, dt, count=count, offset=off)
+        off += count * dt.itemsize
+        return out if shape is None else out.reshape(shape)
+
+    ids = take(id_dt, n).astype(np.int64)
+    versions = take(np.int64, n).copy()
+    stamps = take(np.float64, n).copy()
+    qrows = take(dtype, len(QUANT_FIELDS) * n, (len(QUANT_FIELDS), n)).astype(np.float64)
+    free = take(dtype, n).astype(np.float64)
+    alive = np.unpackbits(take(np.uint8, -(-n // 8) if n else 0), count=n).astype(bool)
+    hb_ids = take(id_dt, n_hb).astype(np.int64)
+    hb_versions = take(np.int64, n_hb).copy()
+    hb_stamps = take(np.float64, n_hb).copy()
+    return {
+        "table": table,
+        "quant": "f16" if flags & _FLAG_F16 else "f32",
+        "ids": ids,
+        "versions": versions,
+        "stamps": stamps,
+        "rows": qrows,
+        "free": free,
+        "alive": alive,
+        "hb_ids": hb_ids,
+        "hb_versions": hb_versions,
+        "hb_stamps": hb_stamps,
+    }
 
 
 class PeerScheduler:
@@ -170,10 +356,23 @@ class PeerScheduler:
         # strictly newer epoch, couldn't be corrected until the owner's
         # next advert). The owner's next applied advert cleans it.
         self._dirty = np.zeros(S, bool)
+        # Content of each column at its current epoch (queue, work,
+        # load, free, alive): epochs open only when a stamped home
+        # re-measurement *differs* from this published snapshot, so the
+        # delta wire scales with change rate instead of round rate.
+        self._pub = self._published_content()
         # Optional measurement source: when the authority regenerates
         # SiteState snapshots per reading (the grid simulator does),
         # refresh_home pulls fresh ones through this callable.
         self.state_provider: Optional[callable] = None
+
+    def _published_content(self) -> np.ndarray:
+        """The (5, S) advertised-content snapshot the change detector
+        compares against: the dynamic owner fields + free + alive."""
+        return np.stack([
+            self.view.queue, self.view.work, self.view.load,
+            self.free, self.view.alive.astype(np.float64),
+        ])
 
     # -- world-view maintenance ------------------------------------------------
     def refresh_home(
@@ -181,8 +380,17 @@ class PeerScheduler:
         now: Optional[float] = None,
         states: Optional[dict[str, SiteState]] = None,
     ) -> None:
-        """Re-measure the home columns from authoritative state and
-        open a new epoch for each (the advertisement version). ``states``
+        """Re-measure the home columns from authoritative state.
+
+        With ``now`` given, every home column gets the fresh stamp and
+        the columns whose measured content actually changed open a new
+        epoch (the advertisement version) — unchanged columns keep
+        their epoch, which is what lets the delta wire skip them. With
+        ``now=None`` this is a *content-only* refresh for local
+        placement: neither the version nor the stamp moves, so an epoch
+        can never open without a stamp (an advert carrying a fresh
+        epoch over a frozen stamp would make receivers overstate
+        ``staleness()`` and wrongly distrust a fresh peer). ``states``
         swaps in fresh authoritative snapshots first (the simulator
         regenerates ``SiteState`` objects per measurement)."""
         if states is None and self.state_provider is not None:
@@ -196,9 +404,16 @@ class PeerScheduler:
         cols = np.flatnonzero(self.home_cols)
         for c in cols:
             self.free[c] = self.authoritative[self.view.names[c]].free_slots
-        self.version[cols] += 1
-        if now is not None:
-            self.stamp[cols] = now
+        if now is None:
+            return
+        cur = np.stack([
+            self.view.queue[cols], self.view.work[cols], self.view.load[cols],
+            self.free[cols], self.view.alive[cols].astype(np.float64),
+        ])
+        changed = cols[np.any(cur != self._pub[:, cols], axis=0)]
+        self.version[changed] += 1
+        self._pub[:, cols] = cur
+        self.stamp[cols] = now
 
     def staleness(self, now: float) -> np.ndarray:
         """Seconds since each column's row was measured by its owner;
@@ -217,17 +432,24 @@ class PeerScheduler:
         idx = np.arange(len(self.view.names)) if cols is None else np.asarray(cols)
         idx = idx[~self._dirty[idx]]
         rows = self.view.pack_rows(idx)
-        return [
-            SiteAdvert(
-                site=self.view.names[c],
-                row=rows[:, k].copy(),
-                alive=bool(self.view.alive[c]),
-                free_slots=float(self.free[c]),
-                version=int(self.version[c]),
-                stamp=float(self.stamp[c]),
+        # Rows are frozen: one adverts() result may be fanned out to (or
+        # queued for) several receivers, and no receiver must be able to
+        # mutate another's payload through the shared arrays.
+        out = []
+        for k, c in enumerate(idx):
+            row = rows[:, k].copy()
+            row.setflags(write=False)
+            out.append(
+                SiteAdvert(
+                    site=self.view.names[c],
+                    row=row,
+                    alive=bool(self.view.alive[c]),
+                    free_slots=float(self.free[c]),
+                    version=int(self.version[c]),
+                    stamp=float(self.stamp[c]),
+                )
             )
-            for k, c in enumerate(idx)
-        ]
+        return out
 
     def receive(self, adverts: Sequence[SiteAdvert]) -> int:
         """Merge advertised rows into the world view, row-versioned:
@@ -241,24 +463,88 @@ class PeerScheduler:
         known = [a for a in adverts if a.site in self._col]
         if not known:
             return 0
-        cols = np.asarray([self._col[a.site] for a in known], np.int64)
-        rows = np.stack([a.row for a in known], axis=1)
+        return self._merge(
+            cols=np.asarray([self._col[a.site] for a in known], np.int64),
+            rows=np.stack([a.row for a in known], axis=1),
+            free=np.asarray([a.free_slots for a in known], np.float64),
+            alive=np.asarray([a.alive for a in known], bool),
+            versions=np.asarray([a.version for a in known], np.int64),
+            stamps=np.asarray([a.stamp for a in known], np.float64),
+            fields=OWNER_FIELDS,
+        )
+
+    def receive_packed(
+        self,
+        names: Sequence[str],
+        qrows: np.ndarray,
+        free: np.ndarray,
+        alive: np.ndarray,
+        versions: np.ndarray,
+        stamps: np.ndarray,
+    ) -> int:
+        """Delta-wire merge: dequantized ``QUANT_FIELDS`` rows
+        ((3, k), f64 after dequantization) for the named sites. Same
+        row-versioned semantics as ``receive`` — quantization touches
+        only the payload floats; epochs are exact, so the
+        strictly-newer invariant is unaffected. ``cap`` is not on the
+        compressed wire (static; every peer bootstraps it)."""
+        keep = [k for k, n in enumerate(names) if n in self._col]
+        if not keep:
+            return 0
+        cols = np.asarray([self._col[names[k]] for k in keep], np.int64)
+        rows = np.zeros((len(PACK_FIELDS), len(keep)))
+        for r, f in enumerate(QUANT_FIELDS):
+            rows[PACK_FIELDS.index(f)] = np.asarray(qrows, np.float64)[r, keep]
+        return self._merge(
+            cols=cols,
+            rows=rows,
+            free=np.asarray(free, np.float64)[keep],
+            alive=np.asarray(alive, bool)[keep],
+            versions=np.asarray(versions, np.int64)[keep],
+            stamps=np.asarray(stamps, np.float64)[keep],
+            fields=QUANT_FIELDS,
+        )
+
+    def refresh_stamps(
+        self,
+        names: Sequence[str],
+        versions: np.ndarray,
+        stamps: np.ndarray,
+    ) -> int:
+        """Heartbeat application: the owner re-measured these columns
+        and found them unchanged. A stamp applies only when this peer
+        already holds exactly the echoed epoch (same content by the
+        one-owner-per-epoch invariant) — a peer that missed an epoch
+        ignores the heartbeat and waits for the delta / full sync.
+        Returns the number of refreshed stamps."""
+        n = 0
+        for name, v, s in zip(names, versions, stamps):
+            c = self._col.get(name)
+            if c is None or self.home_cols[c] or self._dirty[c]:
+                continue
+            if self.version[c] == v and s > self.stamp[c]:
+                self.stamp[c] = float(s)
+                n += 1
+        return n
+
+    def _merge(self, cols, rows, free, alive, versions, stamps, fields) -> int:
         applied = merge_packed_rows(
             self.view,
             self.version,
             self.stamp,
             cols,
             rows,
-            new_version=np.asarray([a.version for a in known], np.int64),
-            new_stamp=np.asarray([a.stamp for a in known], np.float64),
-            alive=np.asarray([a.alive for a in known], bool),
+            new_version=versions,
+            new_stamp=stamps,
+            alive=alive,
             protect=self.home_cols,
-            fields=OWNER_FIELDS,
+            fields=fields,
+            # Speculatively-modified columns accept an equal-epoch
+            # owner advert: canonical content replaces the speculation.
+            reclaim=self._dirty,
         )
         if applied.any():
-            self.free[cols[applied]] = np.asarray(
-                [a.free_slots for a in known], np.float64
-            )[applied]
+            self.free[cols[applied]] = free[applied]
             self._dirty[cols[applied]] = False  # owner truth replaces speculation
         return int(applied.sum())
 
@@ -388,6 +674,24 @@ def single_peer(
     )
 
 
+@dataclass
+class _PairState:
+    """Per-directed-(sender → receiver) wire state.
+
+    ``acked`` and ``hb_stamp`` live at the sender end (what the
+    receiver last acknowledged / the stamp last shipped per column);
+    ``table`` lives at the receiver end (the sender's interned site-id
+    table, set only by decoding a table-bearing packet — ids are
+    meaningless until one arrived). ``sync_round`` is the round of the
+    last full sync (None forces one: the join/negotiation packet).
+    """
+
+    acked: Optional[np.ndarray] = None      # (S,) int64, -1 = never acked
+    hb_stamp: Optional[np.ndarray] = None   # (S,) f64 stamp last sent
+    table: Optional[list] = None
+    sync_round: Optional[int] = None
+
+
 class GossipExchange:
     """Drives advertisement rounds between N peers.
 
@@ -399,7 +703,14 @@ class GossipExchange:
     a full mesh. ``fanout`` caps a peer's per-round neighbor list,
     rotating deterministically across rounds so coverage stays total.
     ``latency_s`` delays delivery: adverts sent at t arrive at
-    t+latency (``deliver_due`` drains what's due).
+    t+latency (``deliver_due`` drains what's due; delta-wire acks ride
+    the same heap back, so ``in_flight`` counts them too).
+
+    ``wire`` picks the format (module docstring): ``"delta"`` (default)
+    sends per-receiver version deltas with quantized payloads
+    (``quant``: f32 default, f16 opt-in) plus heartbeats, with a full
+    sync + interned-table refresh every ``full_sync_every`` rounds per
+    pair; ``"full"`` is the original everything-every-round protocol.
     """
 
     def __init__(
@@ -408,19 +719,39 @@ class GossipExchange:
         topology: Optional[GridTopology] = None,
         latency_s: float = 0.0,
         fanout: Optional[int] = None,
+        wire: str = "delta",
+        quant: str = "f32",
+        full_sync_every: int = 32,
     ):
+        if wire not in ("delta", "full"):
+            raise ValueError(f"wire must be 'delta' or 'full', got {wire!r}")
+        if quant not in _QUANT_DTYPES:
+            raise ValueError(f"quant must be one of {sorted(_QUANT_DTYPES)}")
+        if full_sync_every < 1:
+            raise ValueError("full_sync_every must be ≥ 1")
         self.peers = list(peers)
         self.topology = topology
         self.latency_s = float(latency_s)
         self.fanout = fanout
+        self.wire = wire
+        self.quant = quant
+        self.full_sync_every = int(full_sync_every)
         self.stats = ExchangeStats()
         self._seq = itertools.count()
-        self._in_flight: list[tuple[float, int, int, list[SiteAdvert]]] = []
+        # Heap entries: (due, seq, receiver, kind, payload) with kind
+        # "adverts" (full wire), "packet" (delta wire: (sender, bytes))
+        # or "ack" (delta wire: the acked packet's seq).
+        self._in_flight: list[tuple[float, int, int, str, object]] = []
+        # Delta wire: packets sent but not yet acknowledged,
+        # seq → ((sender, receiver), advertised cols, their versions).
+        self._pending: dict[int, tuple[tuple[int, int], np.ndarray, np.ndarray]] = {}
+        self._pairs: dict[tuple[int, int], _PairState] = {}
         self._groups = self._tier_groups()
         self._reps = [g[0] for g in self._groups]
         self._group_of = {
             i: gi for gi, g in enumerate(self._groups) for i in g
         }
+        self._owner_suppress = self._owner_suppression_masks()
 
     # -- hierarchy-aware fan-out ----------------------------------------------
     def _rootgrid_of(self, home: str) -> str:
@@ -456,39 +787,108 @@ class GossipExchange:
             out = [out[(start + k) % len(out)] for k in range(self.fanout)]
         return out
 
+    def _owner_suppression_masks(self) -> dict[tuple[int, int], np.ndarray]:
+        """Per directed pair (sender i → receiver j): the sender-column
+        mask of hearsay the receiver provably hears owner-direct, so i
+        need not forward it. A column qualifies when its owning peer is
+        in j's every-round sender set (and isn't i itself — i *is* the
+        direct path for its own homes). Only valid when ``fanout`` is
+        uncapped: a capped fan-out rotates, so "owner sends to j every
+        round" no longer holds and suppression is disabled entirely.
+        Receiver-owned columns are always suppressed (protected from
+        hearsay anyway)."""
+        if self.wire != "delta":
+            return {}
+        owner_of: dict[str, Optional[int]] = {}
+        for i, p in enumerate(self.peers):
+            for n in p.home_names:
+                owner_of[n] = None if n in owner_of else i  # ambiguous → off
+        senders_to: dict[int, set[int]] = {
+            j: {
+                i
+                for i in range(len(self.peers))
+                if j in self.neighbors(i, 0)
+            }
+            for j in range(len(self.peers))
+        }
+        masks: dict[tuple[int, int], np.ndarray] = {}
+        for i, p in enumerate(self.peers):
+            for j in range(len(self.peers)):
+                if j == i:
+                    continue
+                direct = (
+                    (senders_to[j] if self.fanout is None else set()) | {j}
+                )
+                masks[(i, j)] = np.asarray(
+                    [
+                        owner_of.get(n) is not None
+                        and owner_of[n] != i
+                        and owner_of[n] in direct
+                        for n in p.view.names
+                    ]
+                )
+        return masks
+
+    def _pair(self, i: int, j: int) -> _PairState:
+        st = self._pairs.get((i, j))
+        if st is None:
+            S = len(self.peers[i].view.names)
+            st = _PairState(
+                acked=np.full(S, -1, np.int64),
+                hb_stamp=np.full(S, -np.inf),
+            )
+            self._pairs[(i, j)] = st
+        return st
+
     @property
     def in_flight(self) -> int:
         return len(self._in_flight)
 
     def next_due(self) -> float:
-        """Arrival time of the earliest in-flight advertisement."""
+        """Arrival time of the earliest in-flight message (advert
+        payloads and, on the delta wire, acks riding back)."""
         if not self._in_flight:
             raise ValueError("no adverts in flight")
         return self._in_flight[0][0]
 
     # -- protocol --------------------------------------------------------------
     def deliver_due(self, now: float) -> int:
-        """Deliver every in-flight advertisement whose latency elapsed."""
+        """Deliver every in-flight message whose latency elapsed.
+        Returns the number of advert columns applied (acks deliver too
+        but count nothing here)."""
         applied = 0
         while self._in_flight and self._in_flight[0][0] <= now:
-            _, _, j, adverts = heapq.heappop(self._in_flight)
-            applied += self.peers[j].receive(adverts)
-            self.stats.deliveries += 1
-        self.stats.adverts_applied += applied
+            due, seq, j, kind, payload = heapq.heappop(self._in_flight)
+            if kind == "adverts":
+                got = self.peers[j].receive(payload)
+                self.stats.deliveries += 1
+                self.stats.adverts_applied += got
+                applied += got
+            elif kind == "packet":
+                sender, buf = payload
+                applied += self._deliver_packet(due, sender, j, buf, seq)
+            else:  # "ack"
+                self._apply_ack(payload)
         return applied
 
     def round(self, now: float) -> ExchangeStats:
         """One advertisement round: every peer re-measures its home
-        rows (a new epoch) and gossips everything it knows to its
-        fan-out set. Zero-latency sends apply immediately (so adverts
-        cascade through the mesh within the round); otherwise they
-        queue until ``deliver_due``."""
+        rows (opening new epochs only for columns whose content
+        changed) and gossips to its fan-out set — everything it knows
+        on the full wire, version deltas + heartbeats on the delta
+        wire. Zero-latency sends apply immediately (so adverts cascade
+        through the mesh within the round); otherwise they queue until
+        ``deliver_due``."""
         self.stats.rounds += 1
         for p in self.peers:
             p.refresh_home(now)
         for i, p in enumerate(self.peers):
             targets = self.neighbors(i, self.stats.rounds)
             if not targets:
+                continue
+            if self.wire == "delta":
+                for j in targets:
+                    self._send_delta(i, j, now)
                 continue
             adverts = p.adverts()
             size = sum(advert_wire_bytes(a) for a in adverts)
@@ -501,6 +901,115 @@ class GossipExchange:
                 else:
                     heapq.heappush(
                         self._in_flight,
-                        (now + self.latency_s, next(self._seq), j, adverts),
+                        (now + self.latency_s, next(self._seq), j, "adverts", adverts),
                     )
         return self.stats
+
+    # -- delta wire ------------------------------------------------------------
+    def _send_delta(self, i: int, j: int, now: float) -> None:
+        """Encode and send one sender→receiver delta packet."""
+        p = self.peers[i]
+        pair = self._pair(i, j)
+        full_sync = (
+            pair.sync_round is None
+            or self.stats.rounds - pair.sync_round >= self.full_sync_every
+        )
+        sendable = ~p._dirty  # speculation never travels under owner epochs
+        if full_sync:
+            # Join/resync: everything non-dirty, table included,
+            # acked vector and owner-direct suppression both ignored.
+            delta = sendable.copy()
+            pair.sync_round = self.stats.rounds
+            self.stats.full_syncs += 1
+        else:
+            suppressed = self._owner_suppress.get(
+                (i, j), np.zeros(len(sendable), bool)
+            )
+            sendable = sendable & ~suppressed
+            delta = sendable & (p.version > pair.acked)
+        cols = np.flatnonzero(delta)
+        # Heartbeats: unchanged columns (receiver already acked exactly
+        # this epoch) whose stamp moved since we last told this receiver.
+        hb = sendable & ~delta & (p.stamp > pair.hb_stamp) if not full_sync else (
+            np.zeros(len(sendable), bool)
+        )
+        hb_cols = np.flatnonzero(hb)
+        payload = encode_packet(
+            names=p.view.names,
+            ids=cols,
+            qrows=np.stack(
+                [p.view.queue[cols], p.view.work[cols], p.view.load[cols]]
+            ),
+            free=p.free[cols],
+            alive=p.view.alive[cols],
+            versions=p.version[cols],
+            stamps=p.stamp[cols],
+            hb_ids=hb_cols,
+            hb_versions=p.version[hb_cols],
+            hb_stamps=p.stamp[hb_cols],
+            quant=self.quant,
+            include_table=full_sync,
+        )
+        pair.hb_stamp[cols] = p.stamp[cols]
+        pair.hb_stamp[hb_cols] = p.stamp[hb_cols]
+        seq = next(self._seq)
+        self._pending[seq] = ((i, j), cols, p.version[cols].copy())
+        self.stats.adverts_sent += len(cols)
+        self.stats.heartbeats_sent += len(hb_cols)
+        self.stats.bytes_sent += len(payload)
+        if self.latency_s <= 0.0:
+            self._deliver_packet(now, i, j, payload, seq)
+        else:
+            heapq.heappush(
+                self._in_flight,
+                (now + self.latency_s, seq, j, "packet", (i, payload)),
+            )
+
+    def _deliver_packet(
+        self, now: float, sender: int, j: int, buf: bytes, seq: int
+    ) -> int:
+        """Decode one delta packet at receiver ``j``, merge it, and send
+        the acknowledgement back (it rides the same latency heap)."""
+        pkt = decode_packet(buf)
+        pair = self._pairs[(sender, j)]
+        if pkt["table"] is not None:
+            pair.table = list(pkt["table"])
+        if pair.table is None:
+            raise RuntimeError(
+                f"delta packet from peer {sender} to {j} before any "
+                "table-bearing full sync"
+            )
+        names = pair.table
+        recv = self.peers[j]
+        applied = recv.receive_packed(
+            names=[names[c] for c in pkt["ids"]],
+            qrows=pkt["rows"],
+            free=pkt["free"],
+            alive=pkt["alive"],
+            versions=pkt["versions"],
+            stamps=pkt["stamps"],
+        )
+        recv.refresh_stamps(
+            names=[names[c] for c in pkt["hb_ids"]],
+            versions=pkt["hb_versions"],
+            stamps=pkt["hb_stamps"],
+        )
+        self.stats.deliveries += 1
+        self.stats.adverts_applied += applied
+        self.stats.acks_sent += 1
+        self.stats.bytes_sent += ACK_WIRE_BYTES
+        if self.latency_s <= 0.0:
+            self._apply_ack(seq)
+        else:
+            heapq.heappush(
+                self._in_flight,
+                (now + self.latency_s, next(self._seq), sender, "ack", seq),
+            )
+        return applied
+
+    def _apply_ack(self, seq: int) -> None:
+        """The receiver holds everything packet ``seq`` advertised:
+        advance the sender's per-receiver acked version vector."""
+        (i, j), cols, versions = self._pending.pop(seq)
+        pair = self._pairs[(i, j)]
+        pair.acked[cols] = np.maximum(pair.acked[cols], versions)

@@ -858,6 +858,9 @@ class P2PGridSim(GridSim):
         migration_max_staleness_s: Optional[float] = None,
         topology: Optional[GridTopology] = None,
         gossip_fanout: Optional[int] = None,
+        gossip_wire: str = "delta",
+        gossip_quant: str = "f32",
+        gossip_full_sync_every: int = 32,
         **kw,
     ):
         kw.setdefault("policy", "diana")
@@ -921,6 +924,8 @@ class P2PGridSim(GridSim):
         self.exchange = GossipExchange(
             self.peers, topology=topology,
             latency_s=self.exchange_latency_s, fanout=gossip_fanout,
+            wire=gossip_wire, quant=gossip_quant,
+            full_sync_every=gossip_full_sync_every,
         )
 
     def run(self, jobs: list[SimJob], until: Optional[float] = None) -> SimResult:

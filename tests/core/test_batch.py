@@ -320,3 +320,80 @@ class TestBulkGroupsEquivalence:
         for name in bA.diana.sites:
             assert (bA.diana.sites[name].queue_length
                     == bB.diana.sites[name].queue_length)
+
+
+class TestMergePackedRows:
+    """The P2P merge primitive: strictly-newer epochs, duplicate
+    tie-breaks, and equal-epoch stamp semantics."""
+
+    def _pack(self, rng, n_sites=6):
+        sites, links = _grid(rng, n_sites, dead_fraction=0.0)
+        sp = SitePack.from_scheduler(sites, links)
+        S = len(sp.names)
+        return sp, np.zeros(S, np.int64), np.zeros(S, np.float64)
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_duplicate_merge_is_order_independent(self, seed):
+        """Satellite regression: equal epochs used to resolve to the
+        first-seen advert, making aggregated-batch merges depend on
+        list order; the newest stamp must win either way."""
+        from repro.core.batch import merge_packed_rows
+
+        rng = np.random.default_rng(seed)
+        k = int(rng.integers(2, 6))
+        col = int(rng.integers(0, 6))
+        versions = rng.integers(1, 4, size=k).astype(np.int64)
+        stamps = np.round(rng.uniform(0, 100, size=k), 3)
+        rows = rng.uniform(0, 50, size=(8, k))
+        order = rng.permutation(k)
+
+        results = []
+        for perm in (np.arange(k), order):
+            sp, version, stamp = self._pack(np.random.default_rng(seed))
+            merge_packed_rows(
+                sp, version, stamp,
+                np.full(k, col), rows[:, perm],
+                versions[perm], stamps[perm],
+            )
+            results.append((sp.queue[col], sp.work[col],
+                            version[col], stamp[col]))
+        assert results[0] == results[1]
+        # And the winner is the lexicographically highest (epoch, stamp).
+        best = max(range(k), key=lambda i: (versions[i], stamps[i]))
+        assert results[0][2] == versions[best]
+
+    def test_equal_epoch_newer_stamp_refreshes_without_applying(self):
+        from repro.core.batch import merge_packed_rows
+
+        sp, version, stamp = self._pack(np.random.default_rng(1))
+        version[2] = 5
+        stamp[2] = 10.0
+        held = sp.queue[2]
+        applied = merge_packed_rows(
+            sp, version, stamp, np.asarray([2]),
+            np.full((8, 1), 99.0), np.asarray([5], np.int64),
+            np.asarray([25.0]),
+        )
+        assert not applied.any()          # same epoch: content unchanged
+        assert sp.queue[2] == held
+        assert stamp[2] == 25.0           # …but the owner clock advanced
+
+    def test_equal_epoch_reclaims_dirty_columns(self):
+        """A receiver that speculatively modified a column accepts the
+        owner's equal-epoch advert back (canonical content replaces the
+        speculation)."""
+        from repro.core.batch import merge_packed_rows
+
+        sp, version, stamp = self._pack(np.random.default_rng(2))
+        version[3] = 7
+        sp.queue[3] = 123.0               # speculative belief
+        dirty = np.zeros(len(sp.names), bool)
+        dirty[3] = True
+        applied = merge_packed_rows(
+            sp, version, stamp, np.asarray([3]),
+            np.full((8, 1), 4.0), np.asarray([7], np.int64),
+            np.asarray([1.0]), reclaim=dirty,
+        )
+        assert applied.all()
+        assert sp.queue[3] == 4.0

@@ -96,6 +96,23 @@ class TestAllocateProportional:
         alloc = allocate_proportional(100, 2, FIG4_CAPS)
         assert set(alloc) == {"C", "D"}
 
+    def test_all_drained_grid_splits_evenly(self):
+        """Satellite regression: zero total capacity used to divide by
+        zero; a fully drained grid now falls back to an even split."""
+        alloc = allocate_proportional(10, 2, {"a": 0.0, "b": 0.0, "c": 0.0})
+        assert sum(alloc.values()) == 10
+        assert len(alloc) == 2
+        assert all(v in (5,) for v in alloc.values())
+
+    def test_all_drained_odd_split_conserves_jobs(self):
+        alloc = allocate_proportional(7, 3, {"a": 0.0, "b": 0.0, "c": 0.0})
+        assert sum(alloc.values()) == 7
+        assert max(alloc.values()) - min(alloc.values()) <= 1
+
+    def test_no_sites_raises(self):
+        with pytest.raises(ValueError, match="no sites"):
+            allocate_proportional(10, 2, {})
+
 
 def _mk_grid():
     sites = {

@@ -297,7 +297,13 @@ class TestGossipExchange:
         assert ex.next_due() == 10.0
         ex.deliver_due(now=10.0)
         assert p0.view.queue[col] == 222.0
+        # Delivering a delta packet sends an ack back on the same heap
+        # — one per delivered packet, due one more latency later.
+        assert ex.in_flight == 2
+        assert ex.next_due() == 20.0
+        ex.deliver_due(now=20.0)
         assert ex.in_flight == 0
+        assert ex.stats.acks_sent == 2
 
     def test_hierarchy_fanout_routes_via_representatives(self):
         """Two RootGrid tiers: a non-representative's row crosses tiers
@@ -411,3 +417,292 @@ class TestPeerSchedulerValidation:
         sites, links = _grid(rng, 3, dead_fraction=0.0)
         with pytest.raises(KeyError):
             PeerScheduler(home="ghost", sites=sites, links=links)
+
+
+class TestRefreshHomeEpochs:
+    """Satellite regression: an epoch must never open without a stamp.
+    ``refresh_home(None)`` is a content-only refresh for local
+    placement; only a stamped re-measurement can advance ``version``,
+    and only when the measured content actually changed."""
+
+    def _pair(self, seed=20):
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        return _peer_ring(sites, links, 2)
+
+    def test_content_only_refresh_moves_neither_version_nor_stamp(self):
+        p0, _ = self._pair()
+        c = p0._col[p0.home]
+        v0, s0 = p0.version.copy(), p0.stamp.copy()
+        p0.authoritative[p0.home].queue_length = 999.0
+        p0.refresh_home(now=None)
+        assert p0.view.queue[c] == 999.0          # content refreshed...
+        assert (p0.version == v0).all()           # ...but no epoch opened
+        assert (p0.stamp == s0).all()             # ...and no stamp moved
+
+    def test_epoch_opens_with_the_stamp_on_change(self):
+        p0, _ = self._pair(21)
+        c = p0._col[p0.home]
+        v = p0.version[c]
+        p0.authoritative[p0.home].queue_length = 123.0
+        p0.refresh_home(now=42.0)
+        assert p0.version[c] == v + 1
+        assert p0.stamp[c] == 42.0                # fresh epoch ⇒ fresh stamp
+
+    def test_unchanged_remeasurement_keeps_epoch_but_restamps(self):
+        p0, _ = self._pair(22)
+        c = p0._col[p0.home]
+        p0.refresh_home(now=10.0)
+        v = p0.version[c]
+        p0.refresh_home(now=20.0)                 # nothing changed
+        assert p0.version[c] == v                 # epoch closed
+        assert p0.stamp[c] == 20.0                # stamp still advances
+
+    def test_content_only_then_stamped_refresh_opens_one_epoch(self):
+        p0, _ = self._pair(23)
+        c = p0._col[p0.home]
+        v = p0.version[c]
+        p0.authoritative[p0.home].queue_length = 7.0
+        p0.refresh_home(now=None)                 # placement-path refresh
+        p0.refresh_home(now=5.0)                  # the stamped measurement
+        assert p0.version[c] == v + 1             # change detected vs _pub
+        assert p0.stamp[c] == 5.0
+
+
+class TestWireCodec:
+    """encode→wire→decode round trips for the delta packet format."""
+
+    def _random_packet(self, rng, n_sites, n_delta, n_hb, quant):
+        names = [f"site-{i:04d}" for i in range(n_sites)]
+        ids = rng.choice(n_sites, size=n_delta, replace=False)
+        qrows = rng.uniform(0, 1e4, size=(3, n_delta))
+        free = rng.uniform(0, 64, size=n_delta)
+        alive = rng.uniform(size=n_delta) > 0.3
+        versions = rng.integers(0, 2**40, size=n_delta).astype(np.int64)
+        stamps = rng.uniform(0, 1e6, size=n_delta)
+        hb_ids = rng.choice(n_sites, size=n_hb, replace=False)
+        hb_versions = rng.integers(0, 2**40, size=n_hb).astype(np.int64)
+        hb_stamps = rng.uniform(0, 1e6, size=n_hb)
+        return names, dict(
+            ids=ids, qrows=qrows, free=free, alive=alive,
+            versions=versions, stamps=stamps, hb_ids=hb_ids,
+            hb_versions=hb_versions, hb_stamps=hb_stamps,
+        )
+
+    @given(seed=st.integers(0, 10_000), include_table=st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_f32_roundtrip(self, seed, include_table):
+        from repro.core.p2p import decode_packet, encode_packet
+
+        rng = np.random.default_rng(seed)
+        names, kw = self._random_packet(
+            rng, n_sites=int(rng.integers(1, 40)) + 8,
+            n_delta=int(rng.integers(0, 8)), n_hb=int(rng.integers(0, 8)),
+            quant="f32",
+        )
+        buf = encode_packet(names, quant="f32", include_table=include_table, **kw)
+        out = decode_packet(buf)
+        assert out["table"] == (names if include_table else None)
+        assert (out["ids"] == kw["ids"]).all()
+        assert (out["versions"] == kw["versions"]).all()   # epochs exact
+        assert (out["stamps"] == kw["stamps"]).all()       # f64 end to end
+        assert (out["alive"] == kw["alive"]).all()
+        assert (out["hb_ids"] == kw["hb_ids"]).all()
+        assert (out["hb_versions"] == kw["hb_versions"]).all()
+        assert (out["hb_stamps"] == kw["hb_stamps"]).all()
+        # f32 quantization: ≤ 2^-24 relative error on the payload.
+        np.testing.assert_allclose(out["rows"], kw["qrows"], rtol=2**-23)
+        np.testing.assert_allclose(out["free"], kw["free"], rtol=2**-23)
+
+    def test_epochs_exact_at_int64_extremes(self):
+        from repro.core.p2p import decode_packet, encode_packet
+
+        for quant in ("f32", "f16"):
+            big = np.asarray([2**62, 0, 1], np.int64)
+            buf = encode_packet(
+                ["a", "b", "c"], ids=np.arange(3),
+                qrows=np.zeros((3, 3)), free=np.zeros(3),
+                alive=np.ones(3, bool), versions=big,
+                stamps=np.zeros(3), hb_ids=np.asarray([0]),
+                hb_versions=np.asarray([2**62 + 1]), hb_stamps=np.asarray([0.0]),
+                quant=quant, include_table=True,
+            )
+            out = decode_packet(buf)
+            assert (out["versions"] == big).all()           # never quantized
+            assert out["hb_versions"][0] == 2**62 + 1
+
+    def test_f16_roundtrip_within_range(self):
+        from repro.core.p2p import decode_packet, encode_packet
+
+        # f16 is an opt-in for small deployments: integers ≤ 2048 are
+        # exact, everything representable is within 2^-10 relative.
+        qrows = np.asarray([[0.0, 17.0, 2048.0], [1.5, 3.25, 100.0],
+                            [0.125, 0.5, 0.75]])
+        buf = encode_packet(
+            ["x", "y", "z"], ids=np.arange(3), qrows=qrows,
+            free=np.asarray([0.0, 8.0, 64.0]), alive=np.ones(3, bool),
+            versions=np.arange(3, dtype=np.int64), stamps=np.zeros(3),
+            hb_ids=np.asarray([], np.int64), hb_versions=np.asarray([], np.int64),
+            hb_stamps=np.asarray([]), quant="f16",
+        )
+        out = decode_packet(buf)
+        assert out["quant"] == "f16"
+        assert (out["rows"] == qrows).all()                 # all exact in f16
+        assert (out["free"] == [0.0, 8.0, 64.0]).all()
+
+    def test_wide_ids_for_large_tables(self):
+        from repro.core.p2p import decode_packet, encode_packet
+
+        names = [f"n{i}" for i in range(70_000)]            # > uint16
+        buf = encode_packet(
+            names, ids=np.asarray([0, 69_999]),
+            qrows=np.zeros((3, 2)), free=np.zeros(2),
+            alive=np.ones(2, bool), versions=np.zeros(2, np.int64),
+            stamps=np.zeros(2), hb_ids=np.asarray([68_000]),
+            hb_versions=np.zeros(1, np.int64), hb_stamps=np.zeros(1),
+        )
+        out = decode_packet(buf)
+        assert (out["ids"] == [0, 69_999]).all()
+        assert out["hb_ids"][0] == 68_000
+
+    def test_bad_magic_raises(self):
+        from repro.core.p2p import decode_packet
+
+        with pytest.raises(ValueError, match="magic"):
+            decode_packet(b"XX" + b"\x00" * 32)
+
+    def test_empty_packet_roundtrip(self):
+        from repro.core.p2p import decode_packet, encode_packet
+
+        buf = encode_packet(
+            ["only"], ids=np.asarray([], np.int64),
+            qrows=np.zeros((3, 0)), free=np.zeros(0),
+            alive=np.zeros(0, bool), versions=np.zeros(0, np.int64),
+            stamps=np.zeros(0), hb_ids=np.asarray([], np.int64),
+            hb_versions=np.zeros(0, np.int64), hb_stamps=np.zeros(0),
+        )
+        out = decode_packet(buf)
+        assert len(out["ids"]) == 0 and len(out["hb_ids"]) == 0
+
+
+class TestDeltaProtocol:
+    """The compressed exchange: full-sync negotiation, delta rounds,
+    heartbeats, acks, and equivalence with the full-flood wire."""
+
+    def _mesh(self, seed, n_sites=6, n_peers=3, **kw):
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, n_sites, dead_fraction=0.0)
+        peers = _peer_ring(sites, links, n_peers)
+        return peers, GossipExchange(peers, **kw)
+
+    def test_invalid_wire_args_raise(self):
+        peers, _ = self._mesh(30)
+        with pytest.raises(ValueError):
+            GossipExchange(peers, wire="morse")
+        with pytest.raises(ValueError):
+            GossipExchange(peers, quant="f8")
+        with pytest.raises(ValueError):
+            GossipExchange(peers, full_sync_every=0)
+
+    def test_first_round_full_syncs_and_converges(self):
+        peers, ex = self._mesh(31)
+        for p in peers:
+            for n in p.home_names:
+                p.authoritative[n].queue_length = 111.0
+        ex.round(now=5.0)
+        for p in peers:
+            assert (p.view.queue == 111.0).all()
+        # Every directed pair negotiated its table exactly once.
+        assert ex.stats.full_syncs == len(peers) * (len(peers) - 1)
+
+    def test_steady_state_sends_nothing_but_heartbeats(self):
+        peers, ex = self._mesh(32)
+        ex.round(now=0.0)
+        sent_after_sync = ex.stats.adverts_sent
+        ex.round(now=60.0)
+        ex.round(now=120.0)
+        # No state changed: no column re-advertised, only heartbeats
+        # (home re-measurements restamp, and the mesh suppresses
+        # owner-direct hearsay entirely).
+        assert ex.stats.adverts_sent == sent_after_sync
+        assert ex.stats.heartbeats_sent > 0
+        assert ex.stats.acks_sent == ex.stats.deliveries
+
+    def test_single_change_ships_a_single_column(self):
+        peers, ex = self._mesh(33, n_peers=2)
+        ex.round(now=0.0)
+        sent = ex.stats.adverts_sent
+        peers[1].authoritative[peers[1].home].queue_length = 777.0
+        ex.round(now=60.0)
+        # Exactly one changed column, one fan-out target.
+        assert ex.stats.adverts_sent == sent + 1
+        assert peers[0].view.queue[peers[0]._col[peers[1].home]] == 777.0
+
+    def test_heartbeats_keep_stable_rows_fresh(self):
+        peers, ex = self._mesh(34, n_peers=2)
+        p0, p1 = peers
+        ex.round(now=0.0)
+        ex.round(now=60.0)
+        ex.round(now=120.0)                     # nothing changed since t=0
+        c = p0._col[p1.home]
+        # Without heartbeats staleness would read 130 − 0; the owner's
+        # re-measurement travels as (id, epoch echo, stamp) instead.
+        assert p0.staleness(now=130.0)[c] == pytest.approx(10.0)
+
+    def test_periodic_full_sync_rejoin(self):
+        peers, ex = self._mesh(35, n_peers=2, full_sync_every=2)
+        ex.round(now=0.0)
+        assert ex.stats.full_syncs == 2          # initial negotiation
+        ex.round(now=60.0)                       # delta round
+        assert ex.stats.full_syncs == 2
+        ex.round(now=120.0)                      # period elapsed → resync
+        assert ex.stats.full_syncs == 4
+        # A rejoining peer (fresh exchange object, no pair state) gets
+        # the table again and converges from scratch.
+        peers[1].authoritative[peers[1].home].queue_length = 888.0
+        ex2 = GossipExchange(peers)
+        ex2.round(now=180.0)
+        assert ex2.stats.full_syncs == 2
+        assert peers[0].view.queue[peers[0]._col[peers[1].home]] == 888.0
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_delta_views_match_full_wire(self, seed):
+        """The headline equivalence: after any sequence of state
+        mutations + rounds, the delta wire's converged views match the
+        full flood's to f32 quantization (epoch vectors exactly)."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 6, dead_fraction=0.0)
+        pf = _peer_ring(sites, links, 3)
+        pd = _peer_ring(sites, links, 3)
+        exf = GossipExchange(pf, wire="full")
+        exd = GossipExchange(pd, wire="delta")
+        for rnd in range(4):
+            mut = rng.integers(0, len(pf))
+            q = float(rng.integers(0, 500))
+            for peers in (pf, pd):
+                p = peers[mut]
+                p.authoritative[p.home].queue_length = q
+            exf.round(now=60.0 * rnd)
+            exd.round(now=60.0 * rnd)
+        for a, b in zip(pf, pd):
+            assert (a.version == b.version).all()
+            assert (a.stamp == b.stamp).all()
+            np.testing.assert_allclose(b.view.queue, a.view.queue, rtol=2**-23)
+            np.testing.assert_allclose(b.view.work, a.view.work, rtol=2**-23)
+            np.testing.assert_allclose(b.free, a.free, rtol=2**-23)
+            assert (a.view.alive == b.view.alive).all()
+
+    def test_delta_bytes_are_a_fraction_of_full(self):
+        """The point of the PR: steady-state delta rounds cost a small
+        fraction of the full flood."""
+        rng = np.random.default_rng(36)
+        sites, links = _grid(rng, 24, dead_fraction=0.0)
+        pf = _peer_ring(sites, links, 4)
+        pd = _peer_ring(sites, links, 4)
+        exf = GossipExchange(pf, wire="full")
+        exd = GossipExchange(pd, wire="delta")
+        for rnd in range(12):
+            exf.round(now=60.0 * rnd)
+            exd.round(now=60.0 * rnd)
+        assert exd.stats.bytes_sent * 5 < exf.stats.bytes_sent
