@@ -1,0 +1,226 @@
+"""BENCH: event-horizon streaming simulator (tentpole PR).
+
+Two claims, measured:
+
+* **Equivalence** — the batched event-horizon loop is bit-identical to
+  the one-pop-per-event reference loop on seeded 4k-job reference
+  workloads, for both ``GridSim`` and ``P2PGridSim`` (placements,
+  starts, finishes, migration flags all equal).
+* **Scale** — an open-loop streaming run (lazy ``poisson_source``, no
+  materialized job list, bounded in-flight state) pushes ~1M jobs
+  through a 1000-site grid in minutes on CPU. The record reports
+  jobs/sec, peak in-flight jobs, and the streaming p50/p95/p99
+  queue-time and turnaround percentiles that survive without per-job
+  records.
+
+    PYTHONPATH=src python benchmarks/streaming_bench.py \
+        [--jobs 1000000] [--sites 1000] [--eq-jobs 4000]
+
+The full-size run writes ``BENCH_streaming.json`` at the repo root;
+``--smoke`` (CI: ~20k jobs x 64 sites) asserts equivalence + bounded
+in-flight state and skips the file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.sim import (
+    GridSim,
+    P2PGridSim,
+    SimConfig,
+    bulk_burst,
+    poisson_source,
+    poisson_stream,
+)
+
+try:
+    from .common import emit
+except ImportError:                       # run as a script
+    from common import emit
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _grid(sites: int) -> dict[str, int]:
+    """Capacity-heterogeneous nodes (4/8/12) — ~8k slots at 1000 sites."""
+    return {f"s{i:04d}": (4, 8, 12)[i % 3] for i in range(sites)}
+
+
+def _reference_workload(names: list[str], jobs: int, seed: int = 0) -> list:
+    """Seeded 4k-job reference: bursts from random origins + a Poisson
+    tail, heavy enough to trigger congestion migration."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(max(1, jobs * 3 // 16)):
+        origin = names[int(rng.integers(len(names)))]
+        out.extend(bulk_burst(f"u{i % 8}", 4, at=float(i * 2), work=300.0,
+                              input_bytes=0.0, output_bytes=0.0, data_site=None,
+                              origin_site=origin, rng=rng, work_jitter=0.3))
+    tail = poisson_stream("tail", 1.0, float(jobs // 4), seed=seed + 1,
+                          work=90.0, input_bytes=0.0, output_bytes=0.0,
+                          data_site=None, origin_site=names[0])
+    out.extend(tail[: max(0, jobs - len(out))])
+    return sorted(out, key=lambda j: j.arrival)
+
+
+def _placements(result) -> list[tuple]:
+    return sorted((j.user, j.arrival, j.exec_site, j.start, j.finish, j.migrated)
+                  for j in result.jobs)
+
+
+def check_equivalence(sites: int, jobs: int, seed: int = 0) -> dict:
+    """Horizon loop vs per-event loop, GridSim and P2PGridSim."""
+    nodes = _grid(sites)
+    names = sorted(nodes)
+    rec: dict = {"sites": sites, "jobs": jobs}
+    base = dict(policy="diana", migration_interval_s=60.0,
+                congestion_window_s=120.0)
+
+    workload = _reference_workload(names, jobs, seed)
+    t0 = time.perf_counter()
+    ev = GridSim(nodes, config=SimConfig(horizon=False, **base)).run(
+        [_copy(j) for j in workload])
+    ev_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    hz = GridSim(nodes, config=SimConfig(horizon=True, **base)).run(
+        [_copy(j) for j in workload])
+    hz_s = time.perf_counter() - t0
+    if _placements(ev) != _placements(hz):
+        raise AssertionError("GridSim horizon loop diverged from per-event loop")
+    rec["gridsim"] = {
+        "identical": True, "migrations": hz.migrations(),
+        "per_event_s": round(ev_s, 2), "horizon_s": round(hz_s, 2),
+        "speedup": round(ev_s / max(hz_s, 1e-9), 2),
+    }
+
+    p2p = dict(base, num_peers=4, exchange_interval_s=45.0,
+               exchange_latency_s=2.0)
+    del p2p["policy"]
+    t0 = time.perf_counter()
+    ev = P2PGridSim(nodes, config=SimConfig(horizon=False, **p2p)).run(
+        [_copy(j) for j in workload])
+    ev_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    hz = P2PGridSim(nodes, config=SimConfig(horizon=True, **p2p)).run(
+        [_copy(j) for j in workload])
+    hz_s = time.perf_counter() - t0
+    if _placements(ev) != _placements(hz):
+        raise AssertionError("P2PGridSim horizon loop diverged from per-event loop")
+    rec["p2p"] = {
+        "identical": True, "migrations": hz.migrations(),
+        "per_event_s": round(ev_s, 2), "horizon_s": round(hz_s, 2),
+        "speedup": round(ev_s / max(hz_s, 1e-9), 2),
+    }
+    return rec
+
+
+def _copy(j):
+    from repro.sim import SimJob
+    return SimJob(user=j.user, arrival=j.arrival, work=j.work,
+                  input_bytes=j.input_bytes, output_bytes=j.output_bytes,
+                  data_site=j.data_site, origin_site=j.origin_site,
+                  t=j.t, group_id=j.group_id)
+
+
+def stream_run(jobs: int, sites: int, seed: int = 0,
+               utilization: float = 0.9) -> dict:
+    """Open-loop streaming run: lazy Poisson source sized so the grid
+    runs at ~``utilization`` of its aggregate service capacity — the
+    in-flight set stays bounded while the total job count is arbitrary."""
+    nodes = _grid(sites)
+    slots = sum(nodes.values())
+    work_s = 300.0
+    rate = utilization * slots / work_s          # jobs/sec the grid can absorb
+    duration = jobs / rate
+    src = poisson_source("stream", rate, duration, seed=seed, work=work_s,
+                         input_bytes=0.0, output_bytes=0.0, data_site=None,
+                         origin_site=sorted(nodes)[0], work_jitter=0.2,
+                         chunk_jobs=8192)
+    cfg = SimConfig(policy="diana", migration_interval_s=600.0,
+                    congestion_window_s=600.0, bucket_s=600.0, horizon=True)
+    sim = GridSim(nodes, config=cfg)
+    t0 = time.perf_counter()
+    res = sim.run(src)
+    wall = time.perf_counter() - t0
+    s = res.stats
+    return {
+        "sites": sites, "slots": slots, "arrival_rate_per_s": round(rate, 2),
+        "jobs_admitted": s.admitted, "jobs_finished": s.finished,
+        "peak_in_flight": s.peak_in_flight,
+        "retained_job_records": len(res.jobs),
+        "sim_horizon_s": round(s.last_finish, 0),
+        "wall_s": round(wall, 1),
+        "jobs_per_sec": round(s.admitted / wall, 0),
+        "queue_time_p50_p95_p99": [round(x, 2) for x in res.queue_time_percentiles()],
+        "turnaround_p50_p95_p99": [round(x, 2) for x in res.turnaround_percentiles()],
+        "avg_turnaround": round(res.avg_turnaround, 2),
+    }
+
+
+def bench(jobs: int = 1_000_000, sites: int = 1000, eq_jobs: int = 4000,
+          seed: int = 0) -> dict:
+    rec = {"bench": "streaming"}
+    rec["equivalence"] = check_equivalence(sites=64, jobs=eq_jobs, seed=seed)
+    rec["open_loop"] = stream_run(jobs, sites, seed=seed)
+    return rec
+
+
+def smoke(jobs: int = 20_000, sites: int = 64, seed: int = 0) -> dict:
+    """CI smoke: equivalence on a reduced reference + a bounded-state
+    streaming run (~20k jobs x 64 sites), no JSON written."""
+    eq = check_equivalence(sites=sites, jobs=2000, seed=seed)
+    st = stream_run(jobs, sites, seed=seed)
+    if st["jobs_admitted"] != st["jobs_finished"]:
+        raise AssertionError("streaming run left unfinished jobs")
+    if st["retained_job_records"] != 0:
+        raise AssertionError("streaming run retained per-job records")
+    if not 0 < st["peak_in_flight"] < st["jobs_admitted"]:
+        raise AssertionError(
+            f"in-flight state not bounded: peak={st['peak_in_flight']} "
+            f"of {st['jobs_admitted']} admitted")
+    return {"bench": "streaming-smoke", "equivalence": eq, "open_loop": st}
+
+
+def run() -> dict:
+    """Reduced size for the aggregate harness."""
+    rec = {"bench": "streaming"}
+    rec["equivalence"] = check_equivalence(sites=32, jobs=1000)
+    rec["open_loop"] = stream_run(jobs=50_000, sites=128)
+    ol = rec["open_loop"]
+    emit("streaming_open_loop", ol["wall_s"] * 1e6,
+         f"{ol['jobs_admitted']} jobs x {ol['sites']} sites, "
+         f"{ol['jobs_per_sec']:.0f} jobs/s, peak_in_flight={ol['peak_in_flight']}")
+    emit("streaming_horizon_equiv",
+         rec["equivalence"]["gridsim"]["horizon_s"] * 1e6,
+         f"bit-identical to per-event loop (grid+p2p), "
+         f"speedup={rec['equivalence']['gridsim']['speedup']}x")
+    q = ol["queue_time_p50_p95_p99"]
+    t = ol["turnaround_p50_p95_p99"]
+    emit("streaming_percentiles", ol["wall_s"] * 1e6,
+         f"queue p50/p95/p99={q[0]}/{q[1]}/{q[2]}s, "
+         f"turnaround p50/p95/p99={t[0]}/{t[1]}/{t[2]}s (bounded accumulators)")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=1_000_000)
+    ap.add_argument("--sites", type=int, default=1000)
+    ap.add_argument("--eq-jobs", type=int, default=4000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: equivalence assert, no BENCH_streaming.json")
+    args = ap.parse_args()
+    if args.smoke:
+        rec = smoke(seed=args.seed)
+        print("BENCH " + json.dumps(rec))
+    else:
+        rec = bench(args.jobs, args.sites, args.eq_jobs, args.seed)
+        print("BENCH " + json.dumps(rec))
+        (REPO_ROOT / "BENCH_streaming.json").write_text(
+            json.dumps(rec, indent=2) + "\n")

@@ -163,3 +163,39 @@ for wire in ("full", "delta"):
 # repro.sim.P2PGridSim (gossip_wire=/gossip_quant=) and
 # benchmarks/p2p_bench.py (bytes + makespan, compressed vs
 # uncompressed, as a function of exchange interval).
+
+# --- 8. event-horizon streaming: one SimConfig, lazy ArrivalSources -------
+# Every simulator knob lives in SimConfig now (the old keyword style
+# still works behind a deprecation shim). The default run loop drains
+# batched event horizons — bit-identical to the per-event reference
+# loop (horizon=False) — and run() takes any ArrivalSource: a plain
+# job list, or a lazy chunked stream that never materializes, so
+# million-job open-loop runs keep bounded in-flight state.
+from repro.sim import GridSim, SimConfig, poisson_source, serving_trace_source
+
+cfg = SimConfig(policy="diana", migration_interval_s=120.0, horizon=True)
+stream = poisson_source("cms", rate_per_s=0.2, duration_s=7200.0, seed=0,
+                        work=90.0, input_bytes=0.0, data_site=None)
+res = GridSim(paper_grid_spec(), config=cfg).run(stream)  # lazy chunks
+s = res.stats                                        # bounded accumulators
+print(f"\nstreaming run: {s.finished} jobs, peak in-flight {s.peak_in_flight}, "
+      f"retained records {len(res.jobs)}")
+print("turnaround p50/p95/p99:",
+      [round(x, 1) for x in res.turnaround_percentiles()])
+
+# serving/engine.py request traces replay through the grid scheduler as
+# an open-loop workload (duck-typed: no jax import needed) — each
+# InferenceRequest becomes a SimJob whose work scales with tokens and
+# whose input bytes are the prompt (the prefix-cache/data-gravity term):
+class _Req:                                 # stands in for InferenceRequest
+    def __init__(self, user, at):
+        import numpy as _np
+        self.user, self.submit_time, self.group_id = user, at, "bulk0"
+        self.prompt = _np.arange(16, dtype=_np.int32)
+        self.max_new_tokens = 8
+
+trace = [_Req("tenantA", float(i)) for i in range(200)]
+res = GridSim(paper_grid_spec(), config=cfg).run(
+    serving_trace_source(trace, work_per_token=0.5))
+print(f"served trace: {res.stats.finished} requests, "
+      f"avg turnaround {res.avg_turnaround:.1f}s")

@@ -25,3 +25,9 @@ python benchmarks/migration_bench.py --jobs 100 --sites 16 --smoke
 # delta-wire run must complete every job (asserts inside the bench; no
 # JSON written).
 python benchmarks/p2p_bench.py --sites 16 --peers 3 --jobs 200 --smoke
+# Streaming smoke (~20k jobs × 64 sites): the batched event-horizon
+# loop must stay bit-identical to the per-event reference loop (GridSim
+# AND P2PGridSim), and an open-loop lazy-ArrivalSource run must finish
+# every job with bounded in-flight state and zero retained per-job
+# records (asserts inside the bench; no JSON written).
+python benchmarks/streaming_bench.py --smoke

@@ -146,6 +146,27 @@ class SitePack:
             self.load[i] = s.load
             self.alive[i] = s.alive
 
+    def refresh_from(
+        self,
+        provider,
+        only: Optional[Sequence[str]] = None,
+        missing: str = "raise",
+    ) -> None:
+        """Incremental refresh through a measurement callable.
+
+        ``provider(name) -> SiteState`` is consulted only for the
+        ``only`` columns (all columns when omitted) — the event-horizon
+        simulator keeps one long-lived pack per grid and re-measures
+        just the sites an event actually mutated between horizons,
+        instead of materializing a full ``sites`` dict per refresh.
+        Because each column is re-read whole (never incrementally
+        updated), a narrowed refresh is bit-identical to a full one.
+        """
+        names = self.names if only is None else list(only)
+        self.refresh_dynamic(
+            {n: provider(n) for n in names}, only=names, missing=missing
+        )
+
     # -- packed-row exchange plumbing (repro.core.p2p wire format) ---------
     def pack_rows(self, cols: Optional[np.ndarray] = None) -> np.ndarray:
         """The (8, S) float64 packed view of the per-site columns in

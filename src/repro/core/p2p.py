@@ -365,6 +365,29 @@ class PeerScheduler:
         # SiteState snapshots per reading (the grid simulator does),
         # refresh_home pulls fresh ones through this callable.
         self.state_provider: Optional[callable] = None
+        # Optional home-column change tracking (enable_home_dirty_tracking):
+        # None = disabled (every provider-backed content refresh re-reads
+        # the whole home partition, the default); a set = only the named
+        # home sites have changed since the last refresh.
+        self._home_dirty: Optional[set] = None
+
+    # -- incremental home refresh ---------------------------------------------
+    def enable_home_dirty_tracking(self) -> None:
+        """Opt in to narrowed content refreshes: after this, a
+        provider-backed ``refresh_home(now=None)`` re-measures only the
+        home sites the authority reported dirty via
+        ``mark_home_dirty`` (all of them initially). The authority must
+        then report *every* home-state mutation, or the view goes
+        stale; stamped refreshes (``now=...``, the exchange round path)
+        always re-measure the full partition."""
+        self._home_dirty = set(self.home_names)
+
+    def mark_home_dirty(self, name: str) -> None:
+        """Note that one home site's authoritative state changed (a
+        no-op unless tracking is enabled; foreign names are ignored —
+        the caller may own a superset partition map)."""
+        if self._home_dirty is not None and name in self.home_sites:
+            self._home_dirty.add(name)
 
     def _published_content(self) -> np.ndarray:
         """The (5, S) advertised-content snapshot the change detector
@@ -393,8 +416,25 @@ class PeerScheduler:
         ``staleness()`` and wrongly distrust a fresh peer). ``states``
         swaps in fresh authoritative snapshots first (the simulator
         regenerates ``SiteState`` objects per measurement)."""
+        pulled_all = False
         if states is None and self.state_provider is not None:
+            if now is None and self._home_dirty is not None:
+                # Narrowed content-only refresh: re-measure just the
+                # home sites the authority reported dirty. Unchanged
+                # columns would re-read to identical floats, so the
+                # narrowing is bit-identical to a full refresh.
+                if not self._home_dirty:
+                    return
+                names = [n for n in self.home_names if n in self._home_dirty]
+                for n in names:
+                    self.authoritative[n] = self.state_provider(n)
+                self.view.refresh_dynamic(self.authoritative, only=names)
+                for n in names:
+                    self.free[self._col[n]] = self.authoritative[n].free_slots
+                self._home_dirty.clear()
+                return
             states = {n: self.state_provider(n) for n in self.home_names}
+            pulled_all = True
         if states is not None:
             for n, st in states.items():
                 if n not in self.home_sites:
@@ -404,6 +444,8 @@ class PeerScheduler:
         cols = np.flatnonzero(self.home_cols)
         for c in cols:
             self.free[c] = self.authoritative[self.view.names[c]].free_slots
+        if pulled_all and self._home_dirty is not None:
+            self._home_dirty.clear()
         if now is None:
             return
         cur = np.stack([

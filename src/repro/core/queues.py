@@ -14,6 +14,7 @@ triggers migration of low-priority jobs to peers (see migration.py).
 from __future__ import annotations
 
 import itertools
+from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
@@ -76,6 +77,14 @@ class MultilevelFeedbackQueues:
         self._services = 0
         self._arrival_times: list[float] = []
         self._service_times: list[float] = []
+        # Rate-sample pruning bookkeeping: simulation timestamps arrive
+        # in non-decreasing order, so samples older than the widest
+        # window ever queried can be discarded (rates() does this) —
+        # without pruning a million-job stream retains every timestamp
+        # forever and every congestion check rescans them all.
+        self._rate_monotone = True         # appends seen so far are sorted
+        self._max_window = 0.0
+        self._prune_floor = -float("inf")
 
     # -- §X quota aggregates ------------------------------------------------
     def _totals(self) -> tuple[float, float]:
@@ -97,7 +106,10 @@ class MultilevelFeedbackQueues:
             self.quotas[job.user] = 1.0
         self.jobs.append(job)
         self._arrivals += 1
-        self._arrival_times.append(job.submit_time if now is None else now)
+        t = job.submit_time if now is None else now
+        if self._arrival_times and t < self._arrival_times[-1]:
+            self._rate_monotone = False
+        self._arrival_times.append(t)
         self.reprioritize_all()
         return job
 
@@ -135,6 +147,8 @@ class MultilevelFeedbackQueues:
         self.jobs.remove(best)
         self._services += 1
         if now is not None:
+            if self._service_times and now < self._service_times[-1]:
+                self._rate_monotone = False
             self._service_times.append(now)
         return best
 
@@ -163,11 +177,40 @@ class MultilevelFeedbackQueues:
         return [j for j in self.jobs if j.queue == prio.NUM_QUEUES - 1]
 
     # -- rates / congestion ---------------------------------------------------
+    def prune_rate_samples(self, cutoff: float) -> None:
+        """Discard rate samples strictly older than ``cutoff``. Only
+        safe (and only applied) while the recorded timestamps are
+        non-decreasing — ``rates`` calls this with ``now`` minus the
+        widest window it has ever been asked about, which keeps memory
+        bounded by window × rate instead of total jobs ever queued."""
+        if not self._rate_monotone or cutoff <= self._prune_floor:
+            return
+        self._prune_floor = cutoff
+        for lst in (self._arrival_times, self._service_times):
+            i = bisect_left(lst, cutoff)
+            if i:
+                del lst[:i]
+
     def rates(self, window: float, now: float) -> tuple[float, float]:
-        """(arrival_rate, service_rate) over the trailing window."""
+        """(arrival_rate, service_rate) over the trailing window.
+
+        Assumes ``now`` is non-decreasing across calls (the simulator's
+        clock): samples older than the widest window ever queried are
+        pruned and no longer countable by a later call that jumps
+        backwards in time. Out-of-order *sample appends* are detected
+        and disable pruning (the count then falls back to a full scan).
+        """
         lo = now - window
-        arr = sum(1 for ts in self._arrival_times if ts >= lo)
-        srv = sum(1 for ts in self._service_times if ts >= lo)
+        if self._rate_monotone:
+            if window > self._max_window:
+                self._max_window = window
+            self.prune_rate_samples(now - self._max_window)
+            at, st = self._arrival_times, self._service_times
+            arr = len(at) - bisect_left(at, lo)
+            srv = len(st) - bisect_left(st, lo)
+        else:
+            arr = sum(1 for ts in self._arrival_times if ts >= lo)
+            srv = sum(1 for ts in self._service_times if ts >= lo)
         return arr / window, srv / window
 
     def congested(self, window: float, now: float) -> bool:

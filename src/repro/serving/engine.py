@@ -55,6 +55,8 @@ class EngineStats:
     decode_steps: int = 0
     batches: int = 0
     prefix_hits: int = 0
+    cycles: int = 0
+    truncated: bool = False             # hit max_cycles with requests still queued
 
 
 class ServingEngine:
@@ -167,9 +169,30 @@ class ServingEngine:
         self._decode_batch(batch)
         return len(batch)
 
-    def run_until_drained(self, max_cycles: int = 1000) -> EngineStats:
+    def run_until_drained(
+        self, max_cycles: int = 1000, on_truncation: str = "raise"
+    ) -> EngineStats:
+        """Cycle until the queues drain or ``max_cycles`` is hit.
+
+        Hitting the cap with requests still queued is never silent:
+        ``on_truncation="raise"`` (default) raises RuntimeError, while
+        ``"flag"`` returns stats with ``truncated=True`` so batch
+        harnesses can record the partial run.
+        """
+        if on_truncation not in ("raise", "flag"):
+            raise ValueError(f"on_truncation must be 'raise' or 'flag', got {on_truncation!r}")
         for _ in range(max_cycles):
             if not len(self.queues):
                 break
             self.step()
+            self.stats.cycles += 1
+        if len(self.queues):
+            self.stats.truncated = True
+            if on_truncation == "raise":
+                raise RuntimeError(
+                    f"run_until_drained truncated: {len(self.queues)} request(s) "
+                    f"still queued after max_cycles={max_cycles} "
+                    f"(served={self.stats.served}); raise max_cycles or pass "
+                    f"on_truncation='flag' to accept partial stats"
+                )
         return self.stats

@@ -1,8 +1,21 @@
 """Discrete-event grid simulator (MONARC analogue, paper §XI)."""
+from .config import SimConfig
 from .grid import GridSim, P2PGridSim, SimResult, uniform_links
-from .workloads import SimJob, bulk_burst, cms_case_study, paper_grid_spec, poisson_stream
+from .streaming import ArrivalSource, ChunkSource, StreamingQuantiles, StreamStats
+from .workloads import (
+    JobList,
+    SimJob,
+    bulk_burst,
+    cms_case_study,
+    paper_grid_spec,
+    poisson_source,
+    poisson_stream,
+    serving_trace_source,
+)
 
 __all__ = [
-    "GridSim", "P2PGridSim", "SimResult", "uniform_links",
-    "SimJob", "bulk_burst", "cms_case_study", "paper_grid_spec", "poisson_stream",
+    "GridSim", "P2PGridSim", "SimResult", "SimConfig", "uniform_links",
+    "ArrivalSource", "ChunkSource", "StreamStats", "StreamingQuantiles",
+    "SimJob", "JobList", "bulk_burst", "cms_case_study", "paper_grid_spec",
+    "poisson_stream", "poisson_source", "serving_trace_source",
 ]

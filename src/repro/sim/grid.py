@@ -44,9 +44,11 @@ from repro.core.bulk import stable_user_peer
 from repro.core.migration import MigrationDecision, apply_migration, select_peer_targets
 from repro.core.p2p import GossipExchange, PeerScheduler
 from repro.core.topology import GridTopology
+from .config import _ALL_FIELDS, _BASE_FIELDS, SimConfig, resolve_config
+from .streaming import StreamStats, _ArrivalCursor, as_arrival_source
 from .workloads import SimJob
 
-__all__ = ["GridSim", "P2PGridSim", "SimResult", "uniform_links"]
+__all__ = ["GridSim", "P2PGridSim", "SimConfig", "SimResult", "uniform_links"]
 
 
 def uniform_links(
@@ -67,39 +69,81 @@ def uniform_links(
 
 @dataclass
 class SimResult:
+    """One simulation run's outcome — the same type for every entry
+    point. ``jobs`` is the caller's list for ``run(list)`` and the
+    (usually empty, see ``SimConfig.retain_jobs``) collected list for
+    streaming ``ArrivalSource`` runs; ``stats`` is always populated
+    with the bounded streaming accumulators, so averages, percentiles
+    and makespan survive even when no per-job records are retained."""
+
     jobs: list[SimJob]
     # site → time-bucket → counters (Fig 9/10/11 series)
     timeline: dict[str, dict[str, list[int]]]
     bucket_s: float
     policy: str
+    stats: Optional[StreamStats] = None
 
     @property
     def avg_queue_time(self) -> float:
         done = [j for j in self.jobs if j.finish >= 0]
-        return float(np.mean([j.queue_time for j in done])) if done else 0.0
+        if done:
+            return float(np.mean([j.queue_time for j in done]))
+        return self.stats.queue_times.mean if self.stats else 0.0
 
     @property
     def avg_exec_time(self) -> float:
         done = [j for j in self.jobs if j.finish >= 0]
-        return float(np.mean([j.exec_time for j in done])) if done else 0.0
+        if done:
+            return float(np.mean([j.exec_time for j in done]))
+        return self.stats.exec_times.mean if self.stats else 0.0
 
     @property
     def avg_turnaround(self) -> float:
         done = [j for j in self.jobs if j.finish >= 0]
-        return float(np.mean([j.turnaround for j in done])) if done else 0.0
+        if done:
+            return float(np.mean([j.turnaround for j in done]))
+        return self.stats.turnarounds.mean if self.stats else 0.0
 
     @property
     def makespan(self) -> float:
-        done = [j for j in self.jobs if j.finish >= 0]
-        return max((j.finish for j in done), default=0.0)
+        done = [j.finish for j in self.jobs if j.finish >= 0]
+        if done:
+            return max(done)
+        return self.stats.last_finish if self.stats else 0.0
+
+    @property
+    def finished(self) -> int:
+        n = sum(1 for j in self.jobs if j.finish >= 0)
+        if n == 0 and self.stats is not None:
+            return self.stats.finished
+        return n
 
     @property
     def throughput(self) -> float:
         m = self.makespan
-        return len([j for j in self.jobs if j.finish >= 0]) / m if m > 0 else 0.0
+        return self.finished / m if m > 0 else 0.0
 
     def migrations(self) -> int:
-        return sum(1 for j in self.jobs if j.migrated)
+        n = sum(1 for j in self.jobs if j.migrated)
+        if n == 0 and self.stats is not None:
+            return self.stats.migrated
+        return n
+
+    # -- streaming-safe percentiles (satellite: bounded accumulators) -----
+    def queue_time_percentiles(self, qs=(0.5, 0.95, 0.99)) -> list[float]:
+        """p50/p95/p99 (by default) queue time from the bounded
+        histogram accumulators — available even for million-job
+        streaming runs that retained no per-job records."""
+        if self.stats is not None and self.stats.finished:
+            return [self.stats.queue_times.quantile(q) for q in qs]
+        done = [j.queue_time for j in self.jobs if j.finish >= 0]
+        return [float(np.quantile(done, q)) for q in qs] if done else [0.0] * len(qs)
+
+    def turnaround_percentiles(self, qs=(0.5, 0.95, 0.99)) -> list[float]:
+        if self.stats is not None and self.stats.finished:
+            return [self.stats.turnarounds.quantile(q) for q in qs]
+        done = [j.turnaround for j in self.jobs if j.finish >= 0]
+        return [float(np.quantile(done, q)) for q in qs] if done else [0.0] * len(qs)
 
 
 class _Site:
@@ -148,36 +192,41 @@ class GridSim:
     # LRU bound on the memoized static cost rows (~4 KB/entry at S=256):
     # arrival batches insert once-used rows; only queued migration
     # candidates re-hit, and evicted rows rebuild vectorized next tick.
+    # Per-instance the bound adapts to the site count (rows are O(S)
+    # each) so a 1k-site streaming run caps the cache near 128 MB.
     _STATIC_CACHE_MAX = 16_384
+
+    #: SimConfig fields this class accepts as legacy keyword arguments.
+    _LEGACY_FIELDS = _BASE_FIELDS
 
     def __init__(
         self,
         site_nodes: dict[str, int],
         links: Optional[dict[tuple[str, str], NetworkLink]] = None,
-        policy: str = "diana",
-        quotas: Optional[dict[str, float]] = None,
-        migration_interval_s: float = 60.0,
-        congestion_window_s: float = 300.0,
-        weights: CostWeights = CostWeights(w_queue=0.0, w_work=1.0, w_load=0.0),
-        bucket_s: float = 60.0,
-        batch_arrivals: bool = True,
-        batch_migration: bool = True,
+        config: Optional[SimConfig] = None,
+        **kw,
     ):
-        assert policy in ("diana", "greedy", "local", "fcfs")
-        self.policy = policy
+        cfg = resolve_config(config, kw, self._LEGACY_FIELDS, type(self).__name__)
+        assert cfg.policy in ("diana", "greedy", "local", "fcfs")
+        self.config = cfg
+        policy = self.policy = cfg.policy
         self._loss: Optional[np.ndarray] = None  # built on first batch
         self._dense_failed = False               # partial table: don't retry
         # job-signature → (net, dtc) static cost rows (see _static_cost_rows)
         self._static_row_cache: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+        S = max(1, len(site_nodes))
+        self._static_cache_max = min(
+            self._STATIC_CACHE_MAX, max(256, int(128e6 / (16 * S)))
+        )
         self.links = links or uniform_links(list(site_nodes))
-        self.quotas = quotas or {}
-        self.weights = weights
-        self.migration_interval_s = migration_interval_s
-        self.congestion_window_s = congestion_window_s
-        self.bucket_s = bucket_s
-        self.batch_arrivals = batch_arrivals
+        self.quotas = cfg.quotas or {}
+        self.weights = cfg.weights
+        self.migration_interval_s = cfg.migration_interval_s
+        self.congestion_window_s = cfg.congestion_window_s
+        self.bucket_s = cfg.bucket_s
+        self.batch_arrivals = cfg.batch_arrivals
         self._batch_arrivals_auto_disabled = False
-        self.batch_migration = batch_migration
+        self.batch_migration = cfg.batch_migration
         self.sites = {
             name: _Site(name, n, self.quotas, use_mlfq=(policy == "diana"))
             for name, n in site_nodes.items()
@@ -203,7 +252,19 @@ class GridSim:
         )
         self._dict_pos = {n: i for i, n in enumerate(self._dict_names)}
         self._sp: Optional[SitePack] = None        # reused migration SitePack
+        self._sp_dirty: Optional[set[str]] = None  # cols to re-read next tick
         self._mig_prio_cache: dict[str, np.ndarray] = {}
+        # Per-site computation-cost value cache (see _comp_base_vec):
+        # recomputed-from-state on demand for dirtied columns only —
+        # value caching (never incremental float updates) keeps it
+        # bit-identical to full recomputation.
+        self._cap_vec = np.asarray(
+            [float(self.sites[n].nodes) for n in self._names_sorted]
+        )
+        self._comp_base: Optional[np.ndarray] = None
+        self._comp_ok: Optional[np.ndarray] = None
+        self._stats: Optional[StreamStats] = None   # active run's accumulators
+        self._collect: Optional[list[SimJob]] = None
 
     # -- link-table lifecycle -------------------------------------------------
     @property
@@ -365,7 +426,7 @@ class GridSim:
                 cache[self._static_sig(miss[k])] = row
                 for i in rows:
                     net[i], dtc[i] = row
-            while len(cache) > self._STATIC_CACHE_MAX:
+            while len(cache) > self._static_cache_max:
                 cache.pop(next(iter(cache)))
         return net, dtc
 
@@ -392,20 +453,46 @@ class GridSim:
         )
         return net, in_term + out_term
 
-    def _comp_vec(self, sj: SimJob) -> np.ndarray:
-        """Live computation-cost column (the only term arrivals mutate).
+    def _dirty_site(self, name: str) -> None:
+        """Invalidate the cached per-site derived values after any
+        mutation of that site's queue/busy/running state. Every mutation
+        path (_admit enqueue, _start, _on_finish, migration moves) calls
+        this; the batch-vs-sequential equivalence suites double as
+        invalidation-completeness tests."""
+        ok = self._comp_ok
+        if ok is not None:
+            ok[self._site_idx[name]] = False
+        sd = self._sp_dirty
+        if sd is not None:
+            sd.add(name)
 
-        Deliberately re-reads full site state per job (same work as the
-        sequential path's ``placement_cost``): MLFQ dispatch pops jobs
-        from queue middles between admissions, and ``queued_work`` is a
-        fresh ordered float sum, so an incremental update would not be
-        bit-identical. The fast path's win is the vectorized net/dtc
-        planes and skipping the per-job (cost, name) sort."""
-        vals = []
-        for n in self._names_sorted:
-            st = self.sites[n].state()
-            vals.append(computation_cost(st, self.weights) + sj.work / st.capacity)
-        return np.asarray(vals)
+    def _comp_base_vec(self) -> np.ndarray:
+        """Per-site ``computation_cost(state())`` column over sorted-name
+        order, value-cached with dirty invalidation.
+
+        Cached entries are *recomputed from fresh state* whenever their
+        site was touched — never incrementally updated — so each value
+        is the exact float the sequential path's ``placement_cost``
+        computes (an unchanged queue re-sums to the identical float;
+        a ``+=``/``-=`` running total would not be bit-identical)."""
+        base, ok = self._comp_base, self._comp_ok
+        if base is None:
+            S = len(self._names_sorted)
+            base = self._comp_base = np.empty(S)
+            ok = self._comp_ok = np.zeros(S, bool)
+        if not ok.all():
+            for i in np.flatnonzero(~ok):
+                st = self.sites[self._names_sorted[i]].state()
+                base[i] = computation_cost(st, self.weights)
+            ok[:] = True
+        return base
+
+    def _comp_vec(self, sj: SimJob) -> np.ndarray:
+        """Live computation-cost column (the only term arrivals mutate):
+        the dirty-cached per-site base plus this job's work/capacity
+        row — elementwise the same two-term addition as the sequential
+        path's ``placement_cost`` (bit-identical)."""
+        return self._comp_base_vec() + sj.work / self._cap_vec
 
     def choose_sites_batch(self, batch: list[SimJob]) -> list[str]:
         """Vectorized ``choose_site`` over a batch against the current
@@ -430,7 +517,56 @@ class GridSim:
         ]
 
     # -- simulation ------------------------------------------------------------
-    def run(self, jobs: list[SimJob], until: Optional[float] = None) -> SimResult:
+    def run(self, jobs, until: Optional[float] = None) -> SimResult:
+        """Simulate one workload to completion (or ``until``).
+
+        ``jobs`` is either a materialized ``list[SimJob]`` (the classic
+        entry point — the returned ``SimResult.jobs`` is that same
+        list) or any lazy ``ArrivalSource`` (an object with
+        ``chunks()``), in which case jobs are generated, placed and
+        retired incrementally with bounded in-flight state and the
+        result carries only the streaming accumulators (unless
+        ``SimConfig.retain_jobs``). Both entry points and both loop
+        implementations (``horizon`` on/off) produce bit-identical
+        results on the same workload.
+        """
+        source = as_arrival_source(jobs)
+        input_list = jobs if isinstance(jobs, list) else None
+        horizon_t = until if until is not None else float("inf")
+        self._stats = StreamStats()
+        # Derived-value caches never survive into a run: the caller may
+        # have mutated site state between runs.
+        self._comp_base = self._comp_ok = None
+        self._sp = None
+        self._sp_dirty = None
+        self._collect = [] if input_list is None and self.config.retain_jobs else None
+        cursor = _ArrivalCursor(source.chunks())
+        self._on_stream_start(cursor.peek_time())
+        if self.config.horizon:
+            self._run_horizon(cursor, horizon_t)
+            out_jobs = input_list if input_list is not None else (self._collect or [])
+        else:
+            materialized = input_list if input_list is not None else cursor.drain()
+            self._run_events(materialized, horizon_t)
+            out_jobs = materialized if (
+                input_list is not None or self.config.retain_jobs
+            ) else []
+        stats, self._stats, self._collect = self._stats, None, None
+        return SimResult(
+            jobs=out_jobs, timeline=self.timeline, bucket_s=self.bucket_s,
+            policy=self.policy, stats=stats,
+        )
+
+    def _on_stream_start(self, t0: float) -> None:
+        """Hook invoked once per run with the first arrival timestamp
+        (``inf`` for an empty workload) — P2PGridSim seeds its peers'
+        bootstrap stamps here."""
+
+    def _run_events(self, jobs: list[SimJob], horizon: float) -> None:
+        """The per-event reference loop: one heap pop per event, exactly
+        the pre-horizon semantics. Arrivals are heap-seeded up front
+        (their seqs are the lowest, so at equal timestamps arrivals
+        always precede completions/migration/exchange)."""
         events: list[tuple[float, int, str, object]] = []
         for sj in jobs:
             heapq.heappush(events, (sj.arrival, next(self._seq), "arrive", sj))
@@ -445,7 +581,6 @@ class GridSim:
                     events,
                     (t0 + self.exchange_interval_s, next(self._seq), "exchange", None),
                 )
-        horizon = until if until is not None else float("inf")
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -490,9 +625,102 @@ class GridSim:
                     )
             elif kind == "deliver":
                 self._on_deliver(now, events)
-        return SimResult(
-            jobs=jobs, timeline=self.timeline, bucket_s=self.bucket_s, policy=self.policy
-        )
+
+    def _run_horizon(self, cursor: _ArrivalCursor, horizon: float) -> None:
+        """The batched event-horizon loop.
+
+        Arrivals live in the lazy ``cursor`` (never in the heap — a 1M
+        job stream costs no heap memory); the heap holds only
+        completions and the periodic migrate/exchange/deliver events.
+        Each iteration advances to ``min(next arrival, heap top)``:
+
+        * arrivals first at equal timestamps (in the per-event loop
+          every arrival's seq is lower than any later-pushed event's),
+          draining the whole same-instant run — or, with
+          ``horizon_eps_s``, the whole epsilon window — into one
+          ``_on_arrive_batch`` (J, S) pass;
+        * consecutive same-instant completions drain in one heap pass
+          (strictly in seq order — each finish still applies its own
+          bookkeeping + dispatch so float op order matches the
+          reference loop bit-for-bit);
+        * migrate/exchange/deliver behave exactly as in the per-event
+          loop, with "arrivals still to come" read from the cursor.
+
+        With ``horizon_eps_s == 0`` the schedule is bit-identical to
+        ``_run_events`` (equivalence-tested for GridSim and P2PGridSim).
+        """
+        inf = float("inf")
+        eps = float(self.config.horizon_eps_s)
+        events: list[tuple[float, int, str, object]] = []
+        t0 = cursor.peek_time()
+        if self.policy == "diana" and t0 != inf:
+            heapq.heappush(
+                events,
+                (t0 + self.migration_interval_s, next(self._seq), "migrate", None),
+            )
+            if getattr(self, "exchange_interval_s", None):
+                heapq.heappush(
+                    events,
+                    (t0 + self.exchange_interval_s, next(self._seq), "exchange", None),
+                )
+
+        while True:
+            ta = cursor.peek_time()
+            te = events[0][0] if events else inf
+            now = min(ta, te)
+            if now == inf or now > horizon:
+                break
+            if ta <= te:
+                hi = min(ta + eps, horizon) if eps > 0.0 else ta
+                self._process_arrivals(cursor.pop_until(hi), ta, events)
+                continue
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == "finish":
+                site_name, cj = payload
+                self._on_finish(site_name, cj, now, events)
+                # Drain the consecutive same-instant completion run
+                # (bulk bursts finish together) without bouncing through
+                # the cursor comparison per event. Strictly in heap
+                # order: a zero-duration dispatch can push a new finish
+                # at `now`, and an interleaved migrate/exchange event
+                # ends the run exactly as it would end the pop sequence.
+                while events and events[0][0] == now and events[0][2] == "finish":
+                    _, _, _, (sn, fcj) = heapq.heappop(events)
+                    self._on_finish(sn, fcj, now, events)
+            elif kind == "migrate":
+                self._on_migrate_check(now, events)
+                if self._stream_work_remaining(cursor):
+                    heapq.heappush(
+                        events,
+                        (now + self.migration_interval_s, next(self._seq), "migrate", None),
+                    )
+            elif kind == "exchange":
+                self._on_exchange(now, events)
+                if self._stream_work_remaining(cursor):
+                    heapq.heappush(
+                        events,
+                        (now + self.exchange_interval_s, next(self._seq), "exchange", None),
+                    )
+            elif kind == "deliver":
+                self._on_deliver(now, events)
+
+    def _process_arrivals(self, batch: list[SimJob], now: float, events: list) -> None:
+        """Admit one drained arrival batch (same-instant, or one eps
+        window). Unlike the per-event loop, eligible single-job batches
+        also take the vectorized path — it is bit-identical to
+        ``choose_site`` per row, and open-loop Poisson streams are
+        almost entirely single arrivals."""
+        if not batch:
+            return
+        if (
+            self.batch_arrivals
+            and self.policy == "diana"
+            and self._batch_eligible(batch)
+        ):
+            self._on_arrive_batch(batch, now, events)
+        else:
+            for sj in batch:
+                self._on_arrive(sj, now, events)
 
     def _work_remaining(self, events: list) -> bool:
         """Whether the periodic events (migrate/exchange) should keep
@@ -500,6 +728,15 @@ class GridSim:
         One predicate for both so they always stop together."""
         return any(s.queue_len() for s in self.sites.values()) or any(
             e[2] == "arrive" for e in events
+        )
+
+    def _stream_work_remaining(self, cursor: _ArrivalCursor) -> bool:
+        """``_work_remaining`` for the horizon loop: pending arrivals
+        live in the cursor, not the heap. Equivalent predicate — in
+        both loops an arrival pending at decision time is strictly in
+        the future."""
+        return any(s.queue_len() for s in self.sites.values()) or (
+            cursor.peek_time() != float("inf")
         )
 
     # -- multi-scheduler hooks (no-ops in the omniscient base sim) -----------
@@ -549,12 +786,17 @@ class GridSim:
             group_id=sj.group_id,
         )
         self._cj2sj[cj.job_id] = sj
+        if self._stats is not None:
+            self._stats.on_admit(sj, len(self._cj2sj))
+        if self._collect is not None:
+            self._collect.append(sj)
         self._bucket(target, "submitted", now)
         if self.policy == "fcfs":
             self.central_fifo.append(cj)
             self._dispatch_central(now, events)
         else:
             self.sites[target].enqueue(cj, now)
+            self._dirty_site(target)
             self._dispatch(target, now, events)
 
     def _start(self, site: _Site, cj: Job, now: float, events: list) -> None:
@@ -564,6 +806,7 @@ class GridSim:
         sj.finish = now + dur
         site.busy += 1
         site.running_work += sj.work
+        self._dirty_site(site.name)
         heapq.heappush(events, (sj.finish, next(self._seq), "finish", (site.name, cj)))
 
     def _dispatch(self, site_name: str, now: float, events: list) -> None:
@@ -588,11 +831,22 @@ class GridSim:
         site = self.sites[site_name]
         site.busy -= 1
         site.running_work -= cj.compute_work
+        self._dirty_site(site_name)
         self._bucket(site_name, "executed", now)
+        self._finalize(cj)
         if self.policy == "fcfs":
             self._dispatch_central(now, events)
         else:
             self._dispatch(site_name, now, events)
+
+    def _finalize(self, cj: Job) -> None:
+        """Retire one completed job: feed the streaming accumulators
+        and drop its in-flight mapping (bounded state — no reference
+        to a finished job's Job/SimJob pair survives unless the caller
+        holds the list)."""
+        sj = self._cj2sj.pop(cj.job_id, None)
+        if sj is not None and self._stats is not None:
+            self._stats.on_finish(sj)
 
     def _on_migrate_check(self, now: float, events: list) -> None:
         """§IX/§X: congested sites push Q4 jobs to cheaper peers.
@@ -692,21 +946,33 @@ class GridSim:
         apply_migration(cj, decision)
         sj.migrated = True
         sj.exec_site = decision.target
+        self._dirty_site(name)
         self._bucket(name, "exported", now)
         self._bucket(decision.target, "imported", now)
         self.sites[decision.target].enqueue(cj, now)
+        self._dirty_site(decision.target)
         self._dispatch(decision.target, now, events)
 
     # -- batched §IX machinery ------------------------------------------------
     def _site_pack(self) -> SitePack:
         """Reused dense site-state pack (sorted-name columns). Built
-        once; afterwards only the dynamic columns are re-read."""
-        states = {n: self.sites[n].state() for n in self._names_sorted}
+        once; across event horizons only the columns dirtied since the
+        last refresh are re-read (``_dirty_site`` marks them), so a
+        mostly-idle 1k-site grid refreshes a handful of columns per
+        migration tick instead of all S. Re-reading a column yields the
+        identical floats a full refresh would, so the narrowing is
+        bit-identical."""
         if self._sp is None:
+            states = {n: self.sites[n].state() for n in self._names_sorted}
             links = {n: NetworkLink(bandwidth_Bps=1.0) for n in self._names_sorted}
             self._sp = SitePack.from_scheduler(states, links, order=self._names_sorted)
-        else:
-            self._sp.refresh_dynamic(states)
+            self._sp_dirty = set()
+        elif self._sp_dirty:
+            names = sorted(self._sp_dirty)
+            self._sp.refresh_from(
+                lambda n: self.sites[n].state(), only=names
+            )
+            self._sp_dirty.clear()
         return self._sp
 
     def _resync_pack(self, sp: SitePack, touched: set[str]) -> None:
@@ -719,6 +985,8 @@ class GridSim:
         sp.refresh_dynamic(
             {tn: self.sites[tn].state() for tn in touched}, only=list(touched)
         )
+        if self._sp_dirty is not None:
+            self._sp_dirty -= touched
 
     def _sorted_priorities(self, name: str) -> np.ndarray:
         """Ascending priority array of one site's queued jobs, cached
@@ -849,33 +1117,32 @@ class P2PGridSim(GridSim):
     event stream is bit-identical to the single-scheduler ``GridSim``.
     """
 
+    #: P2PGridSim accepts the full SimConfig surface as legacy kwargs.
+    _LEGACY_FIELDS = _ALL_FIELDS
+
     def __init__(
         self,
         site_nodes: dict[str, int],
-        num_peers: int = 3,
-        exchange_interval_s: float = 60.0,
-        exchange_latency_s: float = 0.0,
-        migration_max_staleness_s: Optional[float] = None,
-        topology: Optional[GridTopology] = None,
-        gossip_fanout: Optional[int] = None,
-        gossip_wire: str = "delta",
-        gossip_quant: str = "f32",
-        gossip_full_sync_every: int = 32,
+        links: Optional[dict[tuple[str, str], NetworkLink]] = None,
+        config: Optional[SimConfig] = None,
         **kw,
     ):
-        kw.setdefault("policy", "diana")
-        if kw["policy"] != "diana":
+        cfg = resolve_config(config, kw, self._LEGACY_FIELDS, type(self).__name__)
+        if cfg.policy != "diana":
             raise ValueError("multi-scheduler mode requires the 'diana' policy")
-        if exchange_interval_s <= 0.0:
+        if cfg.exchange_interval_s <= 0.0:
             raise ValueError(
                 "exchange_interval_s must be > 0 (the run loop schedules "
                 "exchange rounds at this period)"
             )
-        super().__init__(site_nodes, **kw)
-        self.exchange_interval_s = float(exchange_interval_s)
-        self.exchange_latency_s = float(exchange_latency_s)
+        super().__init__(site_nodes, links=links, config=cfg)
+        self.exchange_interval_s = float(cfg.exchange_interval_s)
+        self.exchange_latency_s = float(cfg.exchange_latency_s)
+        migration_max_staleness_s = cfg.migration_max_staleness_s
+        topology = cfg.topology
+        gossip_fanout = cfg.gossip_fanout
         names = self._names_sorted
-        N = max(1, min(int(num_peers), len(names)))
+        N = max(1, min(int(cfg.num_peers), len(names)))
         self.num_peers = N
         if migration_max_staleness_s is None:
             # Default trust horizon in rounds-behind: a freshly-heard
@@ -919,26 +1186,36 @@ class P2PGridSim(GridSim):
         self._peer_by_site = {}
         for p in self.peers:
             p.state_provider = lambda n: self.sites[n].state()
+            # Per-job home refreshes re-read only the home columns the
+            # simulation actually mutated since the last look (the
+            # _dirty_site override below feeds the marks).
+            p.enable_home_dirty_tracking()
             for n in p.home_names:
                 self._peer_by_site[n] = p
         self.exchange = GossipExchange(
             self.peers, topology=topology,
             latency_s=self.exchange_latency_s, fanout=gossip_fanout,
-            wire=gossip_wire, quant=gossip_quant,
-            full_sync_every=gossip_full_sync_every,
+            wire=cfg.gossip_wire, quant=cfg.gossip_quant,
+            full_sync_every=cfg.gossip_full_sync_every,
         )
 
-    def run(self, jobs: list[SimJob], until: Optional[float] = None) -> SimResult:
+    def _on_stream_start(self, t0: float) -> None:
         # The construction-time view snapshot is the §IX join
         # protocol's initial full-state exchange — it happens at sim
         # start, so seed the stamp vectors at the first arrival (a
         # trace resuming at large t0 must not read the bootstrap as
         # hours-stale and distrust every peer until the first round).
-        if jobs:
-            t0 = min(j.arrival for j in jobs)
+        if t0 != float("inf"):
             for p in self.peers:
                 np.maximum(p.stamp, t0, out=p.stamp)
-        return super().run(jobs, until)
+
+    def _dirty_site(self, name: str) -> None:
+        super()._dirty_site(name)
+        p = getattr(self, "_peer_by_site", None)
+        if p is not None:
+            peer = p.get(name)
+            if peer is not None:
+                peer.mark_home_dirty(name)
 
     # -- routing ---------------------------------------------------------------
     def _submit_peer(self, sj: SimJob) -> PeerScheduler:

@@ -3,15 +3,28 @@
 Includes the paper's test-grid shape (§XI: five sites — site 1 with
 four nodes, the rest with five) and a scaled CMS analysis workload from
 the §II estimates (jobs/day, dataset sizes, subjob fan-out).
+
+Every generator returns an ``ArrivalSource``-conforming value:
+``bulk_burst``/``poisson_stream``/``cms_case_study`` return a
+``JobList`` (a real ``list`` that also yields itself as one sorted
+chunk), while ``poisson_source`` and ``serving_trace_source`` are lazy
+— they generate jobs chunk-by-chunk as the simulator consumes them, so
+a million-job open-loop run never materializes the full list.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
-__all__ = ["SimJob", "paper_grid_spec", "bulk_burst", "poisson_stream", "cms_case_study"]
+from .streaming import ChunkSource
+
+__all__ = [
+    "SimJob", "JobList", "paper_grid_spec",
+    "bulk_burst", "poisson_stream", "poisson_source",
+    "cms_case_study", "serving_trace_source",
+]
 
 
 @dataclass
@@ -45,6 +58,16 @@ class SimJob:
         return max(0.0, self.finish - self.arrival)
 
 
+class JobList(list):
+    """A materialized job list that is also an ``ArrivalSource``: one
+    chunk, stable-sorted by arrival (exactly the order the per-event
+    heap pops equal-timestamp jobs in, so list and source entry points
+    are bit-identical)."""
+
+    def chunks(self):
+        yield sorted(self, key=lambda j: j.arrival)
+
+
 def paper_grid_spec() -> dict[str, int]:
     """§XI test grid: site1 has 4 nodes, site2..site5 have 5 each."""
     return {"site1": 4, "site2": 5, "site3": 5, "site4": 5, "site5": 5}
@@ -62,12 +85,12 @@ def bulk_burst(
     group_id: Optional[str] = None,
     rng: Optional[np.random.Generator] = None,
     work_jitter: float = 0.0,
-) -> list[SimJob]:
+) -> JobList:
     """One bulk submission: n similar jobs at the same instant (§VIII:
     'the priority of the burst … is always the same since each batch of
     jobs has the same execution requirements')."""
     rng = rng or np.random.default_rng(0)
-    jobs = []
+    jobs = JobList()
     for i in range(n):
         w = work * float(1.0 + (rng.uniform(-work_jitter, work_jitter) if work_jitter else 0.0))
         jobs.append(
@@ -81,31 +104,56 @@ def bulk_burst(
     return jobs
 
 
+def poisson_source(
+    user: str,
+    rate_per_s: float,
+    duration_s: float,
+    seed: int = 0,
+    chunk_jobs: int = 4096,
+    **job_kw,
+) -> ChunkSource:
+    """Lazy Poisson arrival stream: jobs are drawn chunk-by-chunk as
+    the simulator consumes them. Job-for-job identical to
+    ``poisson_stream`` with the same seed (same RNG draw order)."""
+    def _chunks():
+        rng = np.random.default_rng(seed)
+        t, buf = 0.0, []
+        while True:
+            t += float(rng.exponential(1.0 / rate_per_s))
+            if t > duration_s:
+                break
+            buf.extend(bulk_burst(user, 1, at=t, rng=rng, **job_kw))
+            if len(buf) >= chunk_jobs:
+                yield buf
+                buf = []
+        if buf:
+            yield buf
+    return ChunkSource(_chunks)
+
+
 def poisson_stream(
     user: str,
     rate_per_s: float,
     duration_s: float,
     seed: int = 0,
     **job_kw,
-) -> list[SimJob]:
-    rng = np.random.default_rng(seed)
-    jobs, t = [], 0.0
-    while True:
-        t += float(rng.exponential(1.0 / rate_per_s))
-        if t > duration_s:
-            break
-        jobs.extend(bulk_burst(user, 1, at=t, rng=rng, **job_kw))
+) -> JobList:
+    """Materialized ``poisson_source`` (kept for small workloads and
+    for callers that index/slice the result)."""
+    jobs = JobList()
+    for chunk in poisson_source(user, rate_per_s, duration_s, seed, **job_kw).chunks():
+        jobs.extend(chunk)
     return jobs
 
 
-def cms_case_study(scale: float = 1.0, seed: int = 0) -> list[SimJob]:
+def cms_case_study(scale: float = 1.0, seed: int = 0) -> JobList:
     """§II estimates, scaled: 100 users, 250 jobs/day expected tier;
     dataset ~30 GB; runtime seconds→hours. ``scale`` shrinks the day."""
     rng = np.random.default_rng(seed)
     users = [f"phys{i:03d}" for i in range(max(2, int(100 * scale)))]
     n_jobs = max(10, int(250 * scale))
     day = 86_400.0 * scale
-    jobs = []
+    jobs = JobList()
     for _ in range(n_jobs):
         user = users[int(rng.integers(len(users)))]
         arrival = float(rng.uniform(0, day))
@@ -119,4 +167,52 @@ def cms_case_study(scale: float = 1.0, seed: int = 0) -> list[SimJob]:
                 origin_site=f"site{int(rng.integers(1, 6))}",
             )
         )
-    return sorted(jobs, key=lambda j: j.arrival)
+    jobs.sort(key=lambda j: j.arrival)
+    return jobs
+
+
+def serving_trace_source(
+    requests: Iterable,
+    *,
+    origin_site: str = "site1",
+    data_site: Optional[str] = None,
+    work_per_token: float = 0.05,
+    output_bytes_per_token: float = 4.0,
+    origin_of=None,
+    chunk_jobs: int = 1024,
+) -> ChunkSource:
+    """Replay a ``serving/engine.py`` request trace through the grid
+    scheduler as an open-loop ``ArrivalSource``.
+
+    ``requests`` is any iterable of ``InferenceRequest``-shaped objects
+    (duck-typed — only ``user``, ``prompt``, ``max_new_tokens``,
+    ``submit_time`` and ``group_id`` are read, so traces can be replayed
+    without importing the jax-backed engine), ordered by
+    ``submit_time``. Each request becomes one ``SimJob``: work scales
+    with total tokens (prefill + decode), input bytes are the prompt
+    bytes (the prefix-cache/data-locality term), output bytes the
+    generated tokens. ``origin_of`` optionally maps a request to its
+    submission site (e.g. a tenant→site routing table); otherwise all
+    requests enter at ``origin_site``.
+    """
+    def _chunks():
+        buf = []
+        for r in requests:
+            prompt = np.asarray(r.prompt)
+            tokens = int(prompt.size) + int(r.max_new_tokens)
+            buf.append(SimJob(
+                user=r.user,
+                arrival=float(r.submit_time),
+                work=tokens * work_per_token,
+                input_bytes=float(prompt.nbytes),
+                output_bytes=float(r.max_new_tokens) * output_bytes_per_token,
+                data_site=data_site,
+                origin_site=origin_of(r) if origin_of is not None else origin_site,
+                group_id=r.group_id,
+            ))
+            if len(buf) >= chunk_jobs:
+                yield buf
+                buf = []
+        if buf:
+            yield buf
+    return ChunkSource(_chunks)

@@ -77,6 +77,35 @@ class TestServingEngine:
         eng.run_until_drained()
         assert eng.stats.prefix_hits >= 2
 
+    def test_truncation_raises_by_default(self, engine_setup):
+        """Regression: hitting max_cycles used to return partial stats
+        silently; it must now raise (or flag, when asked)."""
+        cfg, lm, params = engine_setup
+        rng = np.random.default_rng(4)
+        eng = ServingEngine(lm, params, num_slots=1, max_len=32)
+        for _ in range(4):
+            eng.submit(_req(cfg, "u", rng))
+        with pytest.raises(RuntimeError, match="truncated"):
+            eng.run_until_drained(max_cycles=1)
+        assert eng.stats.truncated
+        assert eng.stats.cycles == 1
+        assert len(eng.queues) > 0          # partial drain really happened
+
+    def test_truncation_flag_mode(self, engine_setup):
+        cfg, lm, params = engine_setup
+        rng = np.random.default_rng(5)
+        eng = ServingEngine(lm, params, num_slots=1, max_len=32)
+        for _ in range(4):
+            eng.submit(_req(cfg, "u", rng))
+        stats = eng.run_until_drained(max_cycles=1, on_truncation="flag")
+        assert stats.truncated and stats.cycles == 1
+        # a full drain afterwards clears the backlog but keeps the flag
+        # as a record that an earlier call truncated
+        stats = eng.run_until_drained(on_truncation="flag")
+        assert stats.served == 4
+        with pytest.raises(ValueError):
+            eng.run_until_drained(on_truncation="ignore")
+
 
 def _pods():
     return [
