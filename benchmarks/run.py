@@ -26,14 +26,15 @@ def main() -> None:
     from . import (bulk_placement_bench, cms_case_study, common,
                    fig4_group_split, fig6_priority, fig7_8_queue_exec,
                    fig9_11_migration, kernels_bench, migration_bench,
-                   p2p_bench, roofline, serving_bench, streaming_bench)
+                   p2p_bench, roofline, scenarios_bench, serving_bench,
+                   streaming_bench)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig4_group_split, fig6_priority, fig7_8_queue_exec,
                 fig9_11_migration, migration_bench, p2p_bench,
                 streaming_bench, cms_case_study, bulk_placement_bench,
-                roofline, kernels_bench, serving_bench):
+                scenarios_bench, roofline, kernels_bench, serving_bench):
         short = mod.__name__.rsplit(".", 1)[-1]
         common.drain_records()
         try:

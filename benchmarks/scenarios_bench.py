@@ -1,0 +1,65 @@
+"""BENCH: the fault-injection scenario pack at bench scale.
+
+Runs every scenario in ``repro.scenarios`` at its ``bench`` scale,
+re-verifies the invariants against the recorded baseline envelopes,
+and writes one ``BENCH_<scenario>.json`` per scenario at the repo root
+(verified metrics plus wall time), so scheduler changes that shift
+fault-handling behaviour show up as bench diffs, not just test reds.
+
+    PYTHONPATH=src python benchmarks/scenarios_bench.py [--scale bench]
+        [--seed 0] [--only name]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.scenarios import SCENARIOS, run_scenario
+
+try:
+    from .common import emit
+except ImportError:                       # run as a script
+    from common import emit
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def bench_one(name: str, scale: str = "bench", seed: int = 0) -> dict:
+    t0 = time.perf_counter()
+    _, _, result, metrics = run_scenario(name, scale=scale, seed=seed)
+    wall = time.perf_counter() - t0
+    rec = {
+        "bench": f"scenario-{name}", "scale": scale, "seed": seed,
+        "jobs": len(result.jobs), "wall_s": round(wall, 3),
+        "metrics": metrics,
+    }
+    (REPO_ROOT / f"BENCH_{name}.json").write_text(
+        json.dumps(rec, indent=2, sort_keys=True) + "\n"
+    )
+    return rec
+
+
+def run() -> dict:
+    """Aggregate-harness entry: all scenarios, bench scale."""
+    out = {}
+    for name in SCENARIOS:
+        rec = bench_one(name)
+        out[name] = rec
+        m = rec["metrics"]
+        emit(f"scenario_{name}", rec["wall_s"] * 1e6,
+             f"finished={m['finished']} makespan={m['makespan']:.0f}s")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("smoke", "bench"), default="bench")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", choices=SCENARIOS, default=None)
+    args = ap.parse_args()
+    for name in ((args.only,) if args.only else SCENARIOS):
+        rec = bench_one(name, scale=args.scale, seed=args.seed)
+        print("BENCH " + json.dumps({k: v for k, v in rec.items()
+                                     if k != "metrics"}))

@@ -31,3 +31,8 @@ python benchmarks/p2p_bench.py --sites 16 --peers 3 --jobs 200 --smoke
 # every job with bounded in-flight state and zero retained per-job
 # records (asserts inside the bench; no JSON written).
 python benchmarks/streaming_bench.py --smoke
+# Scenario-pack smoke (4 scenarios, ~200 jobs × 16 sites each): every
+# generator × verifier pair end to end — fault plans interleaved into
+# the run, invariants asserted, metrics checked against the recorded
+# baseline envelopes. ScenarioViolation fails the build. (~2 s total.)
+python -m repro.scenarios smoke

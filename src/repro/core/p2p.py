@@ -464,6 +464,82 @@ class PeerScheduler:
         out[self.home_cols] = 0.0
         return out
 
+    # -- authoritative-state handover (peer churn) ------------------------------
+    def handover(self, names: Optional[Sequence[str]] = None) -> dict:
+        """Release (part of) this peer's home partition for another
+        peer to ``adopt``.
+
+        The grant carries the authoritative ``SiteState`` references
+        plus each column's current epoch, stamp and published-content
+        snapshot, so the adopter continues the *same* epoch sequence —
+        receivers' strictly-newer merges keep converging across the
+        ownership change (a reset epoch would make the adopter's first
+        adverts look stale and be dropped grid-wide). ``names=None``
+        releases the whole partition; a released column becomes an
+        ordinary remote column here (updated only by gossip from the
+        new owner). Unknown / non-home names raise ``KeyError``."""
+        released = list(self.home_names) if names is None else list(names)
+        unknown = set(released) - self.home_sites
+        if unknown:
+            raise KeyError(
+                f"cannot hand over {sorted(unknown)!r}: not home site(s) "
+                f"of peer {self.home!r}"
+            )
+        grant = {
+            "names": released,
+            "states": {n: self.authoritative[n] for n in released},
+            "version": {n: int(self.version[self._col[n]]) for n in released},
+            "stamp": {n: float(self.stamp[self._col[n]]) for n in released},
+            "pub": {n: self._pub[:, self._col[n]].copy() for n in released},
+        }
+        gone = set(released)
+        for n in released:
+            del self.authoritative[n]
+        self.home_names = [n for n in self.home_names if n not in gone]
+        self.home_sites = frozenset(self.home_names)
+        self.home_cols = np.asarray(
+            [n in self.home_sites for n in self.view.names]
+        )
+        if self._home_dirty is not None:
+            self._home_dirty -= gone
+        return grant
+
+    def adopt(self, grant: dict) -> None:
+        """Take authoritative ownership of a ``handover`` grant.
+
+        The adopted columns join the home partition mid-epoch: version
+        and stamp continue from the granted values (monotonic — a
+        ``max`` guards against an out-of-order grant) and the published
+        -content snapshot transfers, so the next stamped refresh opens
+        a new epoch exactly when the content has drifted from what the
+        previous owner last advertised. The view re-reads authoritative
+        truth immediately (hearsay about sites this peer now *owns*
+        must not linger)."""
+        names = list(grant["names"])
+        unknown = [n for n in names if n not in self._col]
+        if unknown:
+            raise KeyError(
+                f"cannot adopt {unknown!r}: unknown to peer {self.home!r}"
+            )
+        for n in names:
+            c = self._col[n]
+            self.authoritative[n] = grant["states"][n]
+            self.version[c] = max(int(self.version[c]), grant["version"][n])
+            self.stamp[c] = max(float(self.stamp[c]), grant["stamp"][n])
+            self._pub[:, c] = grant["pub"][n]
+            self._dirty[c] = False
+            if n not in self.home_sites:
+                self.home_names.append(n)
+        self.home_sites = frozenset(self.home_names)
+        self.home_cols = np.asarray(
+            [n in self.home_sites for n in self.view.names]
+        )
+        self.view.refresh_dynamic(self.authoritative, only=names)
+        for n in names:
+            self.free[self._col[n]] = self.authoritative[n].free_slots
+        if self._home_dirty is not None:
+            self._home_dirty.update(names)
+
     # -- gossip/epoch advertisement --------------------------------------------
     def adverts(self, cols: Optional[Sequence[int]] = None) -> list[SiteAdvert]:
         """Advertise packed rows (gossip: own rows *and* hearsay — the
@@ -772,6 +848,11 @@ class GossipExchange:
         if full_sync_every < 1:
             raise ValueError("full_sync_every must be ≥ 1")
         self.peers = list(peers)
+        # Liveness bits for peer churn (set_active): an inactive peer
+        # neither sends nor receives and round() skips its refresh.
+        # Must exist before the suppression masks below (they walk
+        # neighbors()).
+        self._active = [True] * len(self.peers)
         self.topology = topology
         self.latency_s = float(latency_s)
         self.fanout = fanout
@@ -819,15 +900,46 @@ class GossipExchange:
         ]
 
     def neighbors(self, idx: int, rnd: int) -> list[int]:
-        """This round's fan-out set for peer ``idx``."""
-        group = self._groups[self._group_of[idx]]
+        """This round's fan-out set for peer ``idx``. Departed
+        (inactive) peers have no neighbors and appear in no one else's
+        set; tier representatives are re-derived as the first *active*
+        member of each group (identical to the static list while
+        everyone is active)."""
+        if not self._active[idx]:
+            return []
+        group = [j for j in self._groups[self._group_of[idx]] if self._active[j]]
         out = [j for j in group if j != idx]
         if idx == group[0]:  # the tier representative bridges tiers
-            out += [r for r in self._reps if r != idx]
+            reps = []
+            for g in self._groups:
+                for m in g:
+                    if self._active[m]:
+                        reps.append(m)
+                        break
+            out += [r for r in reps if r != idx]
         if self.fanout is not None and len(out) > self.fanout:
             start = (rnd * self.fanout) % len(out)
             out = [out[(start + k) % len(out)] for k in range(self.fanout)]
         return out
+
+    def set_active(self, idx: int, active: bool) -> None:
+        """Peer churn: flip one peer's liveness. Deactivating (or
+        reactivating) a peer resets every directed pair that touches it
+        and purges its un-acked packets, so a rejoined peer's first
+        contact with each neighbor is a table-bearing full sync
+        (``_PairState.sync_round=None``) in *both* directions — the
+        rejoiner resynchronizes its world view and its neighbors
+        renegotiate theirs of it. The owner-direct suppression masks
+        are rebuilt against the surviving fan-out (home partitions may
+        have moved via handover/adopt)."""
+        if self._active[idx] == bool(active):
+            return
+        self._active[idx] = bool(active)
+        for key in [k for k in self._pairs if idx in k]:
+            del self._pairs[key]
+        for seq in [s for s, (pr, _, _) in self._pending.items() if idx in pr]:
+            del self._pending[seq]
+        self._owner_suppress = self._owner_suppression_masks()
 
     def _owner_suppression_masks(self) -> dict[tuple[int, int], np.ndarray]:
         """Per directed pair (sender i → receiver j): the sender-column
@@ -902,14 +1014,24 @@ class GossipExchange:
         while self._in_flight and self._in_flight[0][0] <= now:
             due, seq, j, kind, payload = heapq.heappop(self._in_flight)
             if kind == "adverts":
+                if not self._active[j]:
+                    continue          # receiver departed mid-flight
                 got = self.peers[j].receive(payload)
                 self.stats.deliveries += 1
                 self.stats.adverts_applied += got
                 applied += got
             elif kind == "packet":
                 sender, buf = payload
+                if not (self._active[j] and self._active[sender]):
+                    # Either end churned while the packet was airborne:
+                    # the pair state was reset, so the packet (and its
+                    # pending-ack entry) is void.
+                    self._pending.pop(seq, None)
+                    continue
                 applied += self._deliver_packet(due, sender, j, buf, seq)
-            else:  # "ack"
+            else:  # "ack" — j is the original packet's sender here
+                if not self._active[j]:
+                    continue
                 self._apply_ack(payload)
         return applied
 
@@ -922,8 +1044,9 @@ class GossipExchange:
         through the mesh within the round); otherwise they queue until
         ``deliver_due``."""
         self.stats.rounds += 1
-        for p in self.peers:
-            p.refresh_home(now)
+        for k, p in enumerate(self.peers):
+            if self._active[k]:
+                p.refresh_home(now)
         for i, p in enumerate(self.peers):
             targets = self.neighbors(i, self.stats.rounds)
             if not targets:
@@ -1013,14 +1136,17 @@ class GossipExchange:
         """Decode one delta packet at receiver ``j``, merge it, and send
         the acknowledgement back (it rides the same latency heap)."""
         pkt = decode_packet(buf)
-        pair = self._pairs[(sender, j)]
+        pair = self._pair(sender, j)
         if pkt["table"] is not None:
             pair.table = list(pkt["table"])
         if pair.table is None:
-            raise RuntimeError(
-                f"delta packet from peer {sender} to {j} before any "
-                "table-bearing full sync"
-            )
+            # No interned site-id table for this pair: churn reset it
+            # after the packet was sent (a pre-churn delta raced the
+            # rejoin). The ids are meaningless without the table, so
+            # drop the packet un-acked — the forced full sync on the
+            # pair's next send resynchronizes everything it carried.
+            self._pending.pop(seq, None)
+            return 0
         names = pair.table
         recv = self.peers[j]
         applied = recv.receive_packed(
@@ -1051,7 +1177,14 @@ class GossipExchange:
 
     def _apply_ack(self, seq: int) -> None:
         """The receiver holds everything packet ``seq`` advertised:
-        advance the sender's per-receiver acked version vector."""
-        (i, j), cols, versions = self._pending.pop(seq)
-        pair = self._pairs[(i, j)]
+        advance the sender's per-receiver acked version vector. Acks
+        whose pending entry or pair state was purged by churn are
+        no-ops (the reset pair restarts from a full sync anyway)."""
+        entry = self._pending.pop(seq, None)
+        if entry is None:
+            return
+        (i, j), cols, versions = entry
+        pair = self._pairs.get((i, j))
+        if pair is None:
+            return
         pair.acked[cols] = np.maximum(pair.acked[cols], versions)

@@ -1,0 +1,100 @@
+"""Scenario pack: fault-injecting generators, invariant verifiers and
+recorded baselines.
+
+Each scenario is a directory with three parts:
+
+* ``generator.py`` — ``generate(scale, seed) -> ScenarioSpec``: the
+  workload (an arrival source), the grid, and a :class:`FaultPlan`
+  scripting site/peer/link faults into the run.
+* ``verifier.py`` — ``verify(spec, sim, result, baseline) -> dict``:
+  asserts the scenario's invariants against the finished run (raising
+  :class:`ScenarioViolation` on the first breach) and returns the
+  metrics dict it checked.
+* ``baseline.json`` — recorded metric envelopes per scale; counts must
+  match exactly, timing metrics within the recorded ``rel_tol``.
+
+Run them via the CLI::
+
+    python -m repro.scenarios list
+    python -m repro.scenarios smoke                 # all, smoke scale
+    python -m repro.scenarios run peer_churn --scale bench
+    python -m repro.scenarios record --scale both   # refresh baselines
+
+See ``README.md`` in this package for how to add a scenario.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Optional
+
+from .common import (
+    DEFAULT_REL_TOL,
+    SCALES,
+    ScenarioSpec,
+    ScenarioViolation,
+    baseline_path,
+    collect_metrics,
+    grid16,
+    load_baseline,
+    record_baseline,
+)
+
+__all__ = [
+    "SCENARIOS",
+    "SCALES",
+    "DEFAULT_REL_TOL",
+    "ScenarioSpec",
+    "ScenarioViolation",
+    "baseline_path",
+    "collect_metrics",
+    "generate",
+    "get_generator",
+    "get_verifier",
+    "grid16",
+    "load_baseline",
+    "record_baseline",
+    "run_scenario",
+]
+
+SCENARIOS = ("diurnal_flash", "site_failure", "peer_churn", "wan_tiers")
+
+
+def _module(name: str, part: str):
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; one of {SCENARIOS}")
+    return importlib.import_module(f"{__name__}.{name}.{part}")
+
+
+def get_generator(name: str) -> Callable[..., ScenarioSpec]:
+    return _module(name, "generator").generate
+
+
+def get_verifier(name: str) -> Callable[..., dict]:
+    return _module(name, "verifier").verify
+
+
+def generate(name: str, scale: str = "smoke", seed: int = 0) -> ScenarioSpec:
+    return get_generator(name)(scale=scale, seed=seed)
+
+
+def run_scenario(
+    name: str,
+    scale: str = "smoke",
+    seed: int = 0,
+    baseline: Optional[dict] = None,
+    use_recorded_baseline: bool = True,
+) -> tuple[ScenarioSpec, "object", "object", dict]:
+    """Generate, run and verify one scenario.
+
+    Returns ``(spec, sim, result, metrics)``; raises
+    :class:`ScenarioViolation` if any invariant fails. ``baseline``
+    overrides the recorded ``baseline.json`` (pass ``{}`` or set
+    ``use_recorded_baseline=False`` to skip envelope checks, e.g.
+    while re-recording).
+    """
+    spec = generate(name, scale=scale, seed=seed)
+    sim, result = spec.run()
+    if baseline is None and use_recorded_baseline:
+        baseline = load_baseline(name)
+    metrics = get_verifier(name)(spec, sim, result, baseline=baseline)
+    return spec, sim, result, metrics

@@ -1,0 +1,106 @@
+"""CLI for the scenario pack.
+
+    python -m repro.scenarios list
+    python -m repro.scenarios smoke [--seed N]
+    python -m repro.scenarios run <name> [--scale smoke|bench] [--seed N]
+    python -m repro.scenarios record [--scale smoke|bench|both] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from . import (
+    DEFAULT_REL_TOL,
+    SCENARIOS,
+    ScenarioViolation,
+    baseline_path,
+    record_baseline,
+    run_scenario,
+)
+
+
+def _run_one(name: str, scale: str, seed: int, check_baseline: bool = True) -> dict:
+    t0 = time.perf_counter()
+    _, _, _, metrics = run_scenario(
+        name, scale=scale, seed=seed, use_recorded_baseline=check_baseline
+    )
+    metrics["wall_s"] = round(time.perf_counter() - t0, 3)
+    return metrics
+
+
+def cmd_list(_args) -> int:
+    for name in SCENARIOS:
+        print(name)
+    return 0
+
+
+def cmd_smoke(args) -> int:
+    failed = []
+    for name in SCENARIOS:
+        try:
+            m = _run_one(name, "smoke", args.seed)
+        except ScenarioViolation as exc:
+            print(f"FAIL  {name}: {exc}")
+            failed.append(name)
+            continue
+        print(f"ok    {name}: finished={m['finished']} "
+              f"makespan={m['makespan']:.1f}s wall={m['wall_s']}s")
+    if failed:
+        print(f"{len(failed)}/{len(SCENARIOS)} scenarios failed: "
+              f"{', '.join(failed)}")
+        return 1
+    print(f"all {len(SCENARIOS)} scenarios passed at smoke scale")
+    return 0
+
+
+def cmd_run(args) -> int:
+    try:
+        m = _run_one(args.name, args.scale, args.seed)
+    except ScenarioViolation as exc:
+        print(f"FAIL  {args.name}: {exc}")
+        return 1
+    print(json.dumps(m, indent=2, sort_keys=True))
+    return 0
+
+
+def cmd_record(args) -> int:
+    scales = ("smoke", "bench") if args.scale == "both" else (args.scale,)
+    for name in SCENARIOS:
+        for scale in scales:
+            m = _run_one(name, scale, args.seed, check_baseline=False)
+            m.pop("wall_s")
+            record_baseline(name, scale, m, rel_tol=args.rel_tol)
+            print(f"recorded {name}/{scale} -> {baseline_path(name)}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.scenarios")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="list scenario names")
+
+    p = sub.add_parser("smoke", help="run every scenario at smoke scale")
+    p.add_argument("--seed", type=int, default=0)
+
+    p = sub.add_parser("run", help="run one scenario")
+    p.add_argument("name", choices=SCENARIOS)
+    p.add_argument("--scale", choices=("smoke", "bench"), default="smoke")
+    p.add_argument("--seed", type=int, default=0)
+
+    p = sub.add_parser("record", help="re-record baseline envelopes")
+    p.add_argument("--scale", choices=("smoke", "bench", "both"),
+                   default="both")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--rel-tol", type=float, default=DEFAULT_REL_TOL)
+
+    args = ap.parse_args(argv)
+    return {"list": cmd_list, "smoke": cmd_smoke,
+            "run": cmd_run, "record": cmd_record}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

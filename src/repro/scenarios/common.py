@@ -1,0 +1,253 @@
+"""Shared machinery for the fault-injection scenario pack.
+
+A *scenario* is a directory under ``repro/scenarios/`` with three
+parts:
+
+* ``generator.py`` — ``generate(scale, seed) -> ScenarioSpec``: a
+  parameterized workload (any ``ArrivalSource``) plus a ``FaultPlan``
+  and the simulator configuration to run them under;
+* ``verifier.py`` — ``verify(spec, sim, result, baseline) -> dict``:
+  asserts the scenario's invariants against the finished run (raising
+  ``ScenarioViolation`` on failure) and returns the metrics dict;
+* ``baseline.json`` — recorded metric envelopes per scale, re-recorded
+  with ``python -m repro.scenarios record <name>``.
+
+The invariant helpers here are deliberately reusable: conservation,
+no-completion-on-a-dead-site, baseline envelopes and post-run gossip
+reconvergence are the same checks in every scenario; each
+``verifier.py`` composes them with its scenario-specific assertions.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.sim import GridSim, P2PGridSim, SimConfig, SimResult
+from repro.sim.faults import FaultPlan
+
+SCALES = ("smoke", "bench")
+
+#: Default relative envelope for time-valued metrics (counts are exact:
+#: the simulator is deterministic, so a drifted count means a changed
+#: schedule, which is exactly what the baseline should catch).
+DEFAULT_REL_TOL = 0.15
+
+_COUNT_METRICS = frozenset({"finished", "migrated", "requeued", "redirected"})
+
+
+class ScenarioViolation(AssertionError):
+    """An invariant a finished scenario run was required to satisfy
+    does not hold."""
+
+
+@dataclass
+class ScenarioSpec:
+    """Everything needed to build and run one scenario instance."""
+
+    name: str
+    scale: str
+    site_nodes: dict
+    config: SimConfig
+    jobs: object                      # list[SimJob] or lazy ArrivalSource
+    links: Optional[dict] = None
+    p2p: bool = False
+    params: dict = field(default_factory=dict)
+
+    @property
+    def fault_plan(self) -> Optional[FaultPlan]:
+        return self.config.fault_plan
+
+    def build_sim(self) -> GridSim:
+        cls = P2PGridSim if self.p2p else GridSim
+        return cls(self.site_nodes, links=self.links, config=self.config)
+
+    def run(self) -> tuple[GridSim, SimResult]:
+        sim = self.build_sim()
+        return sim, sim.run(self.jobs)
+
+
+def grid16(nodes: int = 3) -> dict[str, int]:
+    """The scenario pack's standard 16-site grid."""
+    return {f"site{i:02d}": nodes for i in range(16)}
+
+
+# -- metrics ---------------------------------------------------------------
+def collect_metrics(result: SimResult) -> dict:
+    """The scenario pack's canonical metric set (all baseline-able)."""
+    s = result.stats
+    p50, p95, p99 = result.turnaround_percentiles((0.5, 0.95, 0.99))
+    return {
+        "finished": s.finished,
+        "migrated": s.migrated,
+        "requeued": s.requeued,
+        "redirected": s.redirected,
+        "makespan": result.makespan,
+        "avg_queue_time": s.queue_times.mean,
+        "avg_turnaround": s.turnarounds.mean,
+        "p50_turnaround": p50,
+        "p95_turnaround": p95,
+        "p99_turnaround": p99,
+    }
+
+
+# -- invariants ------------------------------------------------------------
+def check_conservation(sim: GridSim, result: SimResult) -> None:
+    """submitted = completed + in-flight + requeued, with requeues as
+    events (not terminal states): at run end nothing is in flight, so
+    every admitted job must be finished and no in-flight bookkeeping
+    may survive."""
+    s = result.stats
+    if s.finished != s.admitted:
+        raise ScenarioViolation(
+            f"conservation: admitted {s.admitted} != finished {s.finished} "
+            f"(requeued={s.requeued}, redirected={s.redirected})"
+        )
+    if sim._cj2sj:
+        raise ScenarioViolation(
+            f"conservation: {len(sim._cj2sj)} in-flight job mapping(s) "
+            f"survived run end"
+        )
+    leftover = [n for n, st in sim.sites.items()
+                if st.busy or st.queue_len() or st.running]
+    if leftover or sim.central_fifo:
+        raise ScenarioViolation(
+            f"conservation: residual queue/busy state at {leftover} "
+            f"(central={len(sim.central_fifo)})"
+        )
+
+
+def check_no_dead_completions(result: SimResult, plan: FaultPlan) -> int:
+    """No retained job record may show a completion inside a window its
+    executing site was scripted down (the simulator also asserts this
+    event-by-event; this re-derives it from the plan as an independent
+    check). Returns the number of records checked."""
+    down = plan.down_intervals()
+    checked = 0
+    for j in result.jobs:
+        if j.finish < 0 or j.exec_site not in down:
+            continue
+        checked += 1
+        for t0, t1 in down[j.exec_site]:
+            if t0 <= j.finish < t1:
+                raise ScenarioViolation(
+                    f"job finished at t={j.finish} on {j.exec_site}, "
+                    f"scripted down over [{t0}, {t1})"
+                )
+            if t0 <= j.start < t1 and j.start >= 0:
+                raise ScenarioViolation(
+                    f"job started at t={j.start} on {j.exec_site}, "
+                    f"scripted down over [{t0}, {t1})"
+                )
+    return checked
+
+
+def check_baseline(
+    metrics: dict,
+    baseline: Optional[dict],
+    scale: str,
+    rel_tol: float = DEFAULT_REL_TOL,
+) -> None:
+    """Compare a run's metrics against the recorded envelope: counts
+    must match exactly (the sim is deterministic), times must land
+    within the relative envelope. A missing baseline (not yet recorded)
+    passes — ``python -m repro.scenarios record`` creates it."""
+    if not baseline or scale not in baseline:
+        return
+    ref = baseline[scale]["metrics"]
+    tol = baseline[scale].get("rel_tol", rel_tol)
+    for key, want in ref.items():
+        got = metrics.get(key)
+        if got is None:
+            raise ScenarioViolation(f"metric {key!r} missing from run")
+        if key in _COUNT_METRICS:
+            if int(got) != int(want):
+                raise ScenarioViolation(
+                    f"count metric {key}: got {got}, baseline {want}"
+                )
+        elif abs(got - want) > tol * max(abs(want), 1e-9):
+            raise ScenarioViolation(
+                f"metric {key}: got {got:.6g}, outside ±{tol:.0%} of "
+                f"baseline {want:.6g}"
+            )
+
+
+def check_reconvergence(
+    sim: P2PGridSim,
+    result: SimResult,
+    peer_idx: int,
+    k_rounds: int = 4,
+    rel_tol: float = 1e-3,
+) -> int:
+    """A rejoined peer must reconverge to the omniscient view within
+    ``k_rounds`` extra gossip rounds after the run: every column of its
+    world view (queue, work, load, free, alive) must match the owning
+    peer's authoritative content to quantization tolerance, with an
+    epoch at least as new. Returns the rounds actually needed."""
+    ex = sim.exchange
+    joiner = sim.peers[peer_idx]
+    t = max(result.makespan, result.stats.last_finish)
+
+    def converged() -> Optional[str]:
+        for i, n in enumerate(joiner.view.names):
+            owner = sim._peer_by_site[n]
+            c = owner._col[n]
+            for f in ("queue", "work", "load"):
+                a = float(getattr(joiner.view, f)[i])
+                b = float(getattr(owner.view, f)[c])
+                if abs(a - b) > rel_tol * max(1.0, abs(b)):
+                    return f"{n}.{f}: {a} vs owner {b}"
+            if bool(joiner.view.alive[i]) != bool(owner.view.alive[c]):
+                return f"{n}.alive mismatch"
+            if joiner.version[i] < owner.version[c]:
+                return f"{n}: epoch {joiner.version[i]} < owner {owner.version[c]}"
+        return None
+
+    for r in range(1, k_rounds + 1):
+        t += sim.exchange_interval_s
+        ex.round(t)
+        ex.deliver_due(t + sim.exchange_latency_s + 1.0)
+        if converged() is None:
+            return r
+    raise ScenarioViolation(
+        f"peer {peer_idx} did not reconverge within {k_rounds} gossip "
+        f"rounds: {converged()}"
+    )
+
+
+# -- baseline files --------------------------------------------------------
+def baseline_path(name: str) -> Path:
+    return Path(__file__).parent / name / "baseline.json"
+
+
+def load_baseline(name: str) -> Optional[dict]:
+    p = baseline_path(name)
+    if not p.exists():
+        return None
+    with open(p) as f:
+        data = json.load(f)
+    return data or None
+
+
+def record_baseline(name: str, scale: str, metrics: dict,
+                    rel_tol: float = DEFAULT_REL_TOL) -> dict:
+    """Write one scale's metric envelope into the scenario's
+    ``baseline.json`` (creating the file if needed) and return the full
+    baseline dict."""
+    p = baseline_path(name)
+    data = {}
+    if p.exists():
+        with open(p) as f:
+            data = json.load(f) or {}
+    data[scale] = {
+        "metrics": {k: (int(v) if k in _COUNT_METRICS else float(v))
+                    for k, v in metrics.items()},
+        "rel_tol": rel_tol,
+    }
+    with open(p, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return data

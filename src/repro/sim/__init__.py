@@ -1,5 +1,6 @@
 """Discrete-event grid simulator (MONARC analogue, paper §XI)."""
 from .config import SimConfig
+from .faults import FAULT_KINDS, FaultEvent, FaultPlan
 from .grid import GridSim, P2PGridSim, SimResult, uniform_links
 from .streaming import ArrivalSource, ChunkSource, StreamingQuantiles, StreamStats
 from .workloads import (
@@ -7,6 +8,7 @@ from .workloads import (
     SimJob,
     bulk_burst,
     cms_case_study,
+    diurnal_source,
     paper_grid_spec,
     poisson_source,
     poisson_stream,
@@ -15,7 +17,9 @@ from .workloads import (
 
 __all__ = [
     "GridSim", "P2PGridSim", "SimResult", "SimConfig", "uniform_links",
+    "FaultEvent", "FaultPlan", "FAULT_KINDS",
     "ArrivalSource", "ChunkSource", "StreamStats", "StreamingQuantiles",
     "SimJob", "JobList", "bulk_burst", "cms_case_study", "paper_grid_spec",
-    "poisson_stream", "poisson_source", "serving_trace_source",
+    "poisson_stream", "poisson_source", "diurnal_source",
+    "serving_trace_source",
 ]

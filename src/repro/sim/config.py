@@ -28,6 +28,8 @@ from typing import Optional
 from repro.core import CostWeights
 from repro.core.topology import GridTopology
 
+from .faults import FaultPlan
+
 __all__ = ["SimConfig"]
 
 
@@ -64,6 +66,12 @@ class SimConfig:
     #: collect every admitted ``SimJob`` anyway. ``run(list)`` always
     #: returns the caller's list regardless of this flag.
     retain_jobs: bool = False
+    #: Optional scripted fault injection (``sim.faults.FaultPlan``):
+    #: timestamped site-down/site-up, peer leave/join (P2PGridSim
+    #: only) and link-degradation events, interleaved into the event
+    #: stream identically by both run loops. None = the classic
+    #: always-alive grid.
+    fault_plan: Optional["FaultPlan"] = None
 
     # -- P2PGridSim only --------------------------------------------------
     num_peers: int = 3

@@ -1,0 +1,230 @@
+"""Timestamped fault injection for the grid simulator.
+
+The paper's migration and P2P machinery (§IX/§X) exists because real
+grids misbehave: sites die and come back, schedulers (peers) leave and
+rejoin, WAN links degrade. A ``FaultPlan`` is a deterministic, replayable
+script of such events; ``GridSim.run`` interleaves it into the event
+stream (both the batched event-horizon loop and the per-event reference
+loop, bit-identically) via ``SimConfig.fault_plan``.
+
+Event kinds:
+
+* ``site_down`` / ``site_up`` — flip one site's alive bit. Going down
+  kills the site's running jobs (their pending completion events are
+  invalidated) and drains its queue; every displaced job re-enters
+  placement through the §IX migration path (cost-ranked over the
+  alive sites) and is counted in ``StreamStats.requeued`` and the
+  ``"requeued"`` timeline bucket. Placement never selects a dead site,
+  and a stale-view (P2P) submission aimed at one bounces off the
+  authoritative grid and is redirected (``StreamStats.redirected``).
+* ``peer_leave`` / ``peer_join`` — P2P scheduler churn
+  (``P2PGridSim`` only). On leave the departing peer hands its home
+  partition over to the next active peer
+  (``PeerScheduler.handover()``/``adopt()`` — the epoch sequence
+  continues, so receivers' strictly-newer merges keep converging) and
+  drops out of the gossip fan-out. On join the partition is handed
+  back and the delta wire's table-bearing full-sync path
+  resynchronizes the rejoiner's world view.
+* ``link_degrade`` / ``link_restore`` — multiply bandwidth /
+  add loss on the matching directed WAN links (either every non-local
+  link touching ``site``, or the explicit directed ``pairs``), then
+  invalidate every derived cost plane. Degrade factors compose;
+  restore returns the matching links to their pre-fault table.
+  In-flight transfers are not re-priced: a running job's committed
+  finish time stands (the degradation applies from the next placement
+  on).
+
+A fault-plan sim may be ``run()`` repeatedly: liveness, link state and
+(in ``P2PGridSim``) peer home partitions are restored to the
+construction-time layout at the start of every run, so each run
+replays the plan against a healthy grid. (Peer *world views* carry
+over between runs, exactly as they always have without faults.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+__all__ = ["FaultEvent", "FaultPlan", "FAULT_KINDS"]
+
+FAULT_KINDS = (
+    "site_down",
+    "site_up",
+    "peer_leave",
+    "peer_join",
+    "link_degrade",
+    "link_restore",
+)
+
+_SITE_KINDS = ("site_down", "site_up")
+_PEER_KINDS = ("peer_leave", "peer_join")
+_LINK_KINDS = ("link_degrade", "link_restore")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault. ``site`` names the target of site/link
+    events (link events may instead carry explicit directed ``pairs``);
+    ``peer`` is the P2P peer index for churn events."""
+
+    time: float
+    kind: str
+    site: Optional[str] = None
+    peer: Optional[int] = None
+    pairs: Optional[tuple[tuple[str, str], ...]] = None
+    bandwidth_factor: float = 1.0
+    loss_add: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+        if self.time < 0.0:
+            raise ValueError(f"fault time must be >= 0, got {self.time}")
+        if self.kind in _SITE_KINDS and self.site is None:
+            raise ValueError(f"{self.kind} requires site=")
+        if self.kind in _PEER_KINDS and self.peer is None:
+            raise ValueError(f"{self.kind} requires peer=")
+        if self.kind in _LINK_KINDS and self.site is None and self.pairs is None:
+            raise ValueError(f"{self.kind} requires site= or pairs=")
+        if self.kind == "link_degrade":
+            if self.bandwidth_factor <= 0.0:
+                raise ValueError("bandwidth_factor must be > 0")
+            if self.loss_add < 0.0:
+                raise ValueError("loss_add must be >= 0")
+
+
+@dataclass
+class FaultPlan:
+    """An ordered script of ``FaultEvent``s. Builder methods append and
+    return ``self`` so plans chain:
+
+        FaultPlan().site_down(300.0, "site3").site_up(900.0, "site3")
+
+    Events are replayed in (time, insertion-order) — ties between two
+    scripted events break by the order they were added, identically in
+    both run loops.
+    """
+
+    events: list[FaultEvent] = field(default_factory=list)
+
+    # -- builders -----------------------------------------------------------
+    def add(self, event: FaultEvent) -> "FaultPlan":
+        self.events.append(event)
+        return self
+
+    def site_down(self, time: float, site: str) -> "FaultPlan":
+        return self.add(FaultEvent(time=time, kind="site_down", site=site))
+
+    def site_up(self, time: float, site: str) -> "FaultPlan":
+        return self.add(FaultEvent(time=time, kind="site_up", site=site))
+
+    def peer_leave(self, time: float, peer: int) -> "FaultPlan":
+        return self.add(FaultEvent(time=time, kind="peer_leave", peer=peer))
+
+    def peer_join(self, time: float, peer: int) -> "FaultPlan":
+        return self.add(FaultEvent(time=time, kind="peer_join", peer=peer))
+
+    def link_degrade(
+        self,
+        time: float,
+        site: Optional[str] = None,
+        pairs: Optional[Sequence[tuple[str, str]]] = None,
+        bandwidth_factor: float = 1.0,
+        loss_add: float = 0.0,
+    ) -> "FaultPlan":
+        return self.add(
+            FaultEvent(
+                time=time, kind="link_degrade", site=site,
+                pairs=tuple(pairs) if pairs is not None else None,
+                bandwidth_factor=bandwidth_factor, loss_add=loss_add,
+            )
+        )
+
+    def link_restore(
+        self,
+        time: float,
+        site: Optional[str] = None,
+        pairs: Optional[Sequence[tuple[str, str]]] = None,
+    ) -> "FaultPlan":
+        return self.add(
+            FaultEvent(
+                time=time, kind="link_restore", site=site,
+                pairs=tuple(pairs) if pairs is not None else None,
+            )
+        )
+
+    # -- introspection -------------------------------------------------------
+    def sorted_events(self) -> list[FaultEvent]:
+        """Events in replay order: stable sort by time (insertion order
+        breaks ties)."""
+        return sorted(self.events, key=lambda e: e.time)
+
+    @property
+    def has_peer_events(self) -> bool:
+        return any(e.kind in _PEER_KINDS for e in self.events)
+
+    def down_intervals(self) -> dict[str, list[tuple[float, float]]]:
+        """Per site, the [down, up) windows the plan scripts (an
+        unrecovered site's last window ends at +inf). Verifiers use
+        this to assert that no job ever completed on a dead site."""
+        out: dict[str, list[tuple[float, float]]] = {}
+        open_at: dict[str, float] = {}
+        for ev in self.sorted_events():
+            if ev.kind == "site_down" and ev.site not in open_at:
+                open_at[ev.site] = ev.time
+            elif ev.kind == "site_up" and ev.site in open_at:
+                out.setdefault(ev.site, []).append((open_at.pop(ev.site), ev.time))
+        for site, t0 in open_at.items():
+            out.setdefault(site, []).append((t0, float("inf")))
+        return out
+
+    def dead_at(self, site: str, t: float) -> bool:
+        """Whether the plan scripts ``site`` as down at time ``t``
+        (down-inclusive, up-exclusive)."""
+        return any(
+            t0 <= t < t1 for t0, t1 in self.down_intervals().get(site, ())
+        )
+
+    def validate(
+        self,
+        sites: Optional[set[str]] = None,
+        num_peers: Optional[int] = None,
+    ) -> None:
+        """Static plan checks against a concrete grid. ``sites`` is the
+        grid's site-name set (link-event endpoints may legitimately
+        name off-grid link-table nodes, so only site_down/site_up
+        targets are checked); ``num_peers=None`` means the running sim
+        has no peers at all — any churn event is then an error."""
+        if sites is not None:
+            for ev in self.events:
+                if ev.kind in _SITE_KINDS and ev.site not in sites:
+                    raise ValueError(
+                        f"fault plan names unknown site {ev.site!r} "
+                        f"(grid sites: {sorted(sites)})"
+                    )
+        if self.has_peer_events and num_peers is None:
+            raise ValueError(
+                "fault plan contains peer_leave/peer_join events, which "
+                "require the multi-scheduler P2PGridSim (peer churn has "
+                "no meaning with a single omniscient scheduler)"
+            )
+        if num_peers is not None:
+            departed: set[int] = set()
+            for ev in self.sorted_events():
+                if ev.kind not in _PEER_KINDS:
+                    continue
+                if not 0 <= ev.peer < num_peers:
+                    raise ValueError(
+                        f"fault plan names peer {ev.peer} but the sim has "
+                        f"{num_peers} peer(s)"
+                    )
+                if ev.kind == "peer_leave":
+                    if ev.peer in departed:
+                        raise ValueError(f"peer {ev.peer} leaves twice without rejoining")
+                    departed.add(ev.peer)
+                    if len(departed) >= num_peers:
+                        raise ValueError("fault plan departs every peer at once")
+                else:
+                    if ev.peer not in departed:
+                        raise ValueError(f"peer {ev.peer} joins without having left")
+                    departed.discard(ev.peer)

@@ -155,6 +155,10 @@ class _Site:
         self.mlfq = MultilevelFeedbackQueues(quotas=dict(quotas))
         self.fifo: list[Job] = []
         self.running_work = 0.0
+        self.alive = True
+        # job_id → Job for every job currently executing here, in
+        # dispatch order — a site_down fault kills exactly these.
+        self.running: dict[int, Job] = {}
 
     # queue ops ------------------------------------------------------------
     def enqueue(self, cj: Job, now: float) -> None:
@@ -182,6 +186,7 @@ class _Site:
             queue_length=float(self.queue_len()),
             waiting_work=self.queued_work() + self.running_work,
             load=self.busy / self.nodes,
+            alive=self.alive,
             free_slots=float(self.nodes - self.busy),
         )
 
@@ -235,7 +240,8 @@ class GridSim:
         self._cj2sj: dict[int, SimJob] = {}
         self._seq = itertools.count()
         self.timeline: dict[str, dict[str, list[int]]] = {
-            s: {"submitted": [], "executed": [], "exported": [], "imported": []}
+            s: {"submitted": [], "executed": [], "exported": [],
+                "imported": [], "requeued": []}
             for s in self.sites
         }
         # Columns in sorted-name order: np.argmin's first-index tie-break
@@ -261,6 +267,17 @@ class GridSim:
         self._cap_vec = np.asarray(
             [float(self.sites[n].nodes) for n in self._names_sorted]
         )
+        # Fault-injection state (SimConfig.fault_plan). _alive_vec
+        # mirrors the per-site alive bits in sorted-column order;
+        # _dead counts down sites so the zero-fault fast paths stay
+        # exactly the pre-fault code. _run_token invalidates pending
+        # completion events of killed jobs without heap surgery: each
+        # dispatch stamps a fresh token into the finish payload and a
+        # popped finish whose token is stale is simply dropped.
+        self._alive_vec = np.ones(len(self._names_sorted), bool)
+        self._dead = 0
+        self._run_token: dict[int, int] = {}
+        self._token_seq = itertools.count()
         self._comp_base: Optional[np.ndarray] = None
         self._comp_ok: Optional[np.ndarray] = None
         self._stats: Optional[StreamStats] = None   # active run's accumulators
@@ -274,6 +291,9 @@ class GridSim:
     @links.setter
     def links(self, value: dict[tuple[str, str], NetworkLink]) -> None:
         self._links = value
+        # A new table is its own pristine state: link faults snapshot
+        # lazily on first degradation (see _apply_link_fault).
+        self._pristine_links = None
         self.invalidate_links()
 
     def invalidate_links(self) -> None:
@@ -355,16 +375,28 @@ class GridSim:
     # -- placement policies --------------------------------------------------
     def choose_site(self, sj: SimJob) -> str:
         if self.policy == "local":
+            # Dead origin sites bounce in _admit (the job is redirected
+            # through the §IX failover path, not silently re-homed).
             return sj.origin_site
         if self.policy == "greedy":
+            pool = (
+                [s for s in self.sites.values() if s.alive]
+                if self._dead else self.sites.values()
+            )
+            if not pool:
+                raise RuntimeError("no alive site available")
             return max(
-                self.sites.values(),
+                pool,
                 key=lambda s: (s.nodes - s.busy - s.queue_len(), s.nodes),
             ).name
         # diana — §V: ascending total cost, first alive site.
         costs = sorted(
-            (self.placement_cost(sj, name), name) for name in self.sites
+            (self.placement_cost(sj, name), name)
+            for name in self.sites
+            if not self._dead or self.sites[name].alive
         )
+        if not costs:
+            raise RuntimeError("no alive site available")
         return costs[0][1]
 
     # -- batched §IV evaluation (arrival-batch fast path) ---------------------
@@ -492,7 +524,13 @@ class GridSim:
         the dirty-cached per-site base plus this job's work/capacity
         row — elementwise the same two-term addition as the sequential
         path's ``placement_cost`` (bit-identical)."""
-        return self._comp_base_vec() + sj.work / self._cap_vec
+        out = self._comp_base_vec() + sj.work / self._cap_vec
+        if self._dead:
+            # Poison dead columns: +inf propagates through the cost
+            # sum, so argmin lands on the cheapest alive site — the
+            # same site the filtered sequential sort selects.
+            out = np.where(self._alive_vec, out, np.inf)
+        return out
 
     def choose_sites_batch(self, batch: list[SimJob]) -> list[str]:
         """Vectorized ``choose_site`` over a batch against the current
@@ -510,6 +548,8 @@ class GridSim:
             [computation_cost(self.sites[n].state(), self.weights)
              for n in self._names_sorted]
         )
+        if self._dead:
+            base = np.where(self._alive_vec, base, np.inf)
         cap = np.asarray([float(self.sites[n].nodes) for n in self._names_sorted])
         return [
             self._names_sorted[int(np.argmin((net[i] + (base + sj.work / cap)) + dtc[i]))]
@@ -533,6 +573,16 @@ class GridSim:
         source = as_arrival_source(jobs)
         input_list = jobs if isinstance(jobs, list) else None
         horizon_t = until if until is not None else float("inf")
+        plan = self.config.fault_plan
+        if plan is not None:
+            plan.validate(
+                sites=set(self.sites),
+                num_peers=getattr(self, "num_peers", None),
+            )
+        # Every run replays its fault plan from a clean slate (and a
+        # previous truncated run must not leak liveness/link damage
+        # into a plain re-run either).
+        self._reset_faults()
         self._stats = StreamStats()
         # Derived-value caches never survive into a run: the caller may
         # have mutated site state between runs.
@@ -570,6 +620,7 @@ class GridSim:
         events: list[tuple[float, int, str, object]] = []
         for sj in jobs:
             heapq.heappush(events, (sj.arrival, next(self._seq), "arrive", sj))
+        self._seed_faults(events)
         if self.policy == "diana" and jobs:
             t0 = min(j.arrival for j in jobs)
             heapq.heappush(
@@ -602,8 +653,10 @@ class GridSim:
                 else:
                     self._on_arrive(payload, now, events)
             elif kind == "finish":
-                site_name, cj = payload
-                self._on_finish(site_name, cj, now, events)
+                site_name, cj, tok = payload
+                self._on_finish(site_name, cj, tok, now, events)
+            elif kind == "fault":
+                self._on_fault(payload, now, events)
             elif kind == "migrate":
                 self._on_migrate_check(now, events)
                 if self._work_remaining(events):
@@ -652,6 +705,12 @@ class GridSim:
         inf = float("inf")
         eps = float(self.config.horizon_eps_s)
         events: list[tuple[float, int, str, object]] = []
+        # Fault events are seeded up front in both loops, so their seqs
+        # are below every runtime-pushed finish: at equal timestamps a
+        # fault pops before the finishes it is about to invalidate —
+        # identically here and in the reference loop (the same-instant
+        # finish drain below stops when a fault reaches the heap top).
+        self._seed_faults(events)
         t0 = cursor.peek_time()
         if self.policy == "diana" and t0 != inf:
             heapq.heappush(
@@ -676,17 +735,20 @@ class GridSim:
                 continue
             now, _, kind, payload = heapq.heappop(events)
             if kind == "finish":
-                site_name, cj = payload
-                self._on_finish(site_name, cj, now, events)
+                site_name, cj, tok = payload
+                self._on_finish(site_name, cj, tok, now, events)
                 # Drain the consecutive same-instant completion run
                 # (bulk bursts finish together) without bouncing through
                 # the cursor comparison per event. Strictly in heap
                 # order: a zero-duration dispatch can push a new finish
-                # at `now`, and an interleaved migrate/exchange event
-                # ends the run exactly as it would end the pop sequence.
+                # at `now`, and an interleaved migrate/exchange/fault
+                # event ends the run exactly as it would end the pop
+                # sequence.
                 while events and events[0][0] == now and events[0][2] == "finish":
-                    _, _, _, (sn, fcj) = heapq.heappop(events)
-                    self._on_finish(sn, fcj, now, events)
+                    _, _, _, (sn, fcj, ftok) = heapq.heappop(events)
+                    self._on_finish(sn, fcj, ftok, now, events)
+            elif kind == "fault":
+                self._on_fault(payload, now, events)
             elif kind == "migrate":
                 self._on_migrate_check(now, events)
                 if self._stream_work_remaining(cursor):
@@ -777,7 +839,16 @@ class GridSim:
             row = (net[i] + self._comp_vec(sj)) + dtc[i]
             self._admit(sj, self._names_sorted[int(np.argmin(row))], now, events)
 
-    def _admit(self, sj: SimJob, target: str, now: float, events: list) -> None:
+    def _admit(self, sj: SimJob, target: str, now: float, events: list) -> str:
+        if self.policy != "fcfs" and not self.sites[target].alive:
+            # A stale-view submission (P2P) or dead-origin local job
+            # aimed at a down site: the authoritative grid bounces it
+            # to the cheapest alive site. Returns the final target so
+            # the caller's optimistic bookkeeping follows the job.
+            target = self._failover_target(sj)
+            sj.requeues += 1
+            if self._stats is not None:
+                self._stats.on_redirect()
         sj.exec_site = target
         sj.queue_enter = now
         cj = Job(
@@ -798,6 +869,7 @@ class GridSim:
             self.sites[target].enqueue(cj, now)
             self._dirty_site(target)
             self._dispatch(target, now, events)
+        return target
 
     def _start(self, site: _Site, cj: Job, now: float, events: list) -> None:
         sj = self._cj2sj[cj.job_id]
@@ -806,11 +878,18 @@ class GridSim:
         sj.finish = now + dur
         site.busy += 1
         site.running_work += sj.work
+        site.running[cj.job_id] = cj
+        tok = next(self._token_seq)
+        self._run_token[cj.job_id] = tok
         self._dirty_site(site.name)
-        heapq.heappush(events, (sj.finish, next(self._seq), "finish", (site.name, cj)))
+        heapq.heappush(
+            events, (sj.finish, next(self._seq), "finish", (site.name, cj, tok))
+        )
 
     def _dispatch(self, site_name: str, now: float, events: list) -> None:
         site = self.sites[site_name]
+        if not site.alive:
+            return
         while site.busy < site.nodes:
             cj = site.pop(now)
             if cj is None:
@@ -819,7 +898,7 @@ class GridSim:
 
     def _dispatch_central(self, now: float, events: list) -> None:
         while self.central_fifo:
-            free = [s for s in self.sites.values() if s.busy < s.nodes]
+            free = [s for s in self.sites.values() if s.alive and s.busy < s.nodes]
             if not free:
                 return
             cj = self.central_fifo.popleft()
@@ -827,10 +906,24 @@ class GridSim:
             self._cj2sj[cj.job_id].exec_site = site.name
             self._start(site, cj, now, events)
 
-    def _on_finish(self, site_name: str, cj: Job, now: float, events: list) -> None:
+    def _on_finish(
+        self, site_name: str, cj: Job, tok: int, now: float, events: list
+    ) -> None:
+        if self._run_token.get(cj.job_id) != tok:
+            # Stale completion: the job's site died and the job was
+            # requeued (and possibly redispatched with a fresh token)
+            # after this event was scheduled. Drop it.
+            return
+        del self._run_token[cj.job_id]
         site = self.sites[site_name]
+        if not site.alive:
+            raise AssertionError(
+                f"job {cj.job_id} completed on dead site {site_name!r} — "
+                f"fault bookkeeping failed to invalidate its finish event"
+            )
         site.busy -= 1
         site.running_work -= cj.compute_work
+        site.running.pop(cj.job_id, None)
         self._dirty_site(site_name)
         self._bucket(site_name, "executed", now)
         self._finalize(cj)
@@ -848,6 +941,151 @@ class GridSim:
         if sj is not None and self._stats is not None:
             self._stats.on_finish(sj)
 
+    # -- fault injection (SimConfig.fault_plan) -------------------------------
+    def _seed_faults(self, events: list) -> None:
+        """Push the plan's events into the heap before any runtime
+        event allocates a seq: at equal timestamps faults then order
+        after arrivals (whose seqs are lower still) and before every
+        finish/migrate/exchange — identically in both run loops."""
+        plan = self.config.fault_plan
+        if plan is None:
+            return
+        for ev in plan.sorted_events():
+            heapq.heappush(events, (ev.time, next(self._seq), "fault", ev))
+
+    def _on_fault(self, ev, now: float, events: list) -> None:
+        if ev.kind == "site_down":
+            self._fail_site(ev.site, now, events)
+        elif ev.kind == "site_up":
+            self._recover_site(ev.site, now, events)
+        elif ev.kind in ("link_degrade", "link_restore"):
+            self._apply_link_fault(ev)
+        else:
+            # peer_leave/peer_join — P2PGridSim overrides; run() has
+            # already validated plans, so this is a defensive backstop.
+            raise ValueError(
+                f"fault kind {ev.kind!r} requires the multi-scheduler "
+                f"P2PGridSim"
+            )
+
+    def _failover_target(self, sj: SimJob) -> str:
+        """Re-place one displaced/redirected job over the alive sites:
+        greedy keeps its free-slot rule; every other policy takes the
+        §IX route — cheapest alive site by the full §IV cost."""
+        alive = [n for n in self.sites if self.sites[n].alive]
+        if not alive:
+            raise RuntimeError("no alive site available")
+        if self.policy == "greedy":
+            return max(
+                (self.sites[n] for n in alive),
+                key=lambda s: (s.nodes - s.busy - s.queue_len(), s.nodes),
+            ).name
+        return min((self.placement_cost(sj, n), n) for n in alive)[1]
+
+    def _fail_site(self, name: str, now: float, events: list) -> None:
+        site = self.sites[name]
+        if not site.alive:
+            return
+        site.alive = False
+        self._alive_vec[self._site_idx[name]] = False
+        self._dead += 1
+        # Kill running jobs (their pending finish events go stale via
+        # the run-token check), then drain the queue; displaced jobs
+        # re-enter placement in dispatch order then queue order.
+        displaced: list[Job] = []
+        for jid, cj in list(site.running.items()):
+            del site.running[jid]
+            self._run_token.pop(jid, None)
+            site.busy -= 1
+            site.running_work -= cj.compute_work
+            sj = self._cj2sj[cj.job_id]
+            sj.start = sj.finish = -1.0
+            displaced.append(cj)
+        if site.use_mlfq:
+            for cj in list(site.mlfq.jobs):
+                site.mlfq.remove(cj)
+                displaced.append(cj)
+        else:
+            drained, site.fifo = site.fifo, []
+            displaced.extend(drained)
+        self._dirty_site(name)
+        for cj in displaced:
+            self._requeue(cj, name, now, events)
+
+    def _requeue(self, cj: Job, from_site: str, now: float, events: list) -> None:
+        """Re-place one job displaced by a site death — the §IX
+        migration path over the alive sites (fcfs jobs simply rejoin
+        the central queue). The job is NOT pinned: a genuine §IX
+        migration later may still move it once."""
+        sj = self._cj2sj[cj.job_id]
+        sj.requeues += 1
+        if self._stats is not None:
+            self._stats.on_requeue()
+        self._bucket(from_site, "requeued", now)
+        if self.policy == "fcfs":
+            self.central_fifo.append(cj)
+            self._dispatch_central(now, events)
+            return
+        target = self._failover_target(sj)
+        sj.exec_site = target
+        self.sites[target].enqueue(cj, now)
+        self._dirty_site(target)
+        self._dispatch(target, now, events)
+
+    def _recover_site(self, name: str, now: float, events: list) -> None:
+        site = self.sites[name]
+        if site.alive:
+            return
+        site.alive = True
+        self._alive_vec[self._site_idx[name]] = True
+        self._dead -= 1
+        self._dirty_site(name)
+        if self.policy == "fcfs":
+            # The revived capacity may unblock the central queue; other
+            # policies re-route at the next arrival/migration tick (the
+            # site comes back with an empty queue).
+            self._dispatch_central(now, events)
+
+    def _apply_link_fault(self, ev) -> None:
+        """Degrade (multiply bandwidth / add loss) or restore the
+        matching directed links, then drop every derived cost plane.
+        Degradations compose; restore returns to the pre-fault table."""
+        if self._pristine_links is None:
+            self._pristine_links = dict(self._links)
+        if ev.pairs is not None:
+            wanted = set(ev.pairs)
+            match = wanted.__contains__
+        else:
+            match = lambda pair: ev.site in pair and pair[0] != pair[1]
+        changed = False
+        for pair, link in list(self._links.items()):
+            if not match(pair):
+                continue
+            if ev.kind == "link_degrade":
+                self._links[pair] = NetworkLink(
+                    bandwidth_Bps=link.bandwidth_Bps * ev.bandwidth_factor,
+                    loss_rate=min(0.999, link.loss_rate + ev.loss_add),
+                    rtt_s=link.rtt_s,
+                    mss_bytes=link.mss_bytes,
+                )
+            else:
+                self._links[pair] = self._pristine_links.get(pair, link)
+            changed = True
+        if changed:
+            self.invalidate_links()
+
+    def _reset_faults(self) -> None:
+        """Restore construction-time liveness and link state so every
+        ``run()`` replays its plan from a clean slate."""
+        if getattr(self, "_pristine_links", None) is not None:
+            self.links = dict(self._pristine_links)  # setter invalidates
+        for site in self.sites.values():
+            site.alive = True
+            site.running.clear()
+        self._alive_vec[:] = True
+        self._dead = 0
+        self._run_token.clear()
+
     def _on_migrate_check(self, now: float, events: list) -> None:
         """§IX/§X: congested sites push Q4 jobs to cheaper peers.
 
@@ -864,14 +1102,18 @@ class GridSim:
         )
         if not batched:
             for name, site in self.sites.items():
-                if site.use_mlfq and site.mlfq.congested(self.congestion_window_s, now):
+                if (
+                    site.use_mlfq
+                    and site.alive
+                    and site.mlfq.congested(self.congestion_window_s, now)
+                ):
                     self._migrate_site_sequential(name, site, now, events)
             return
         self._mig_prio_cache.clear()
         sp: Optional[SitePack] = None
         idx = self._site_idx
         for name, site in self.sites.items():
-            if not site.use_mlfq:
+            if not site.use_mlfq or not site.alive:
                 continue
             if not site.mlfq.congested(self.congestion_window_s, now):
                 continue
@@ -917,7 +1159,9 @@ class GridSim:
                     total_cost=self.placement_cost(sj, p),
                 )
                 for p in self.sites
-                if p != name and (trusted is None or p in trusted)
+                if p != name
+                and self.sites[p].alive
+                and (trusted is None or p in trusted)
             ]
             decision = select_peer(
                 cj, name,
@@ -1044,7 +1288,9 @@ class GridSim:
         for s, pname in enumerate(names):
             ja[:, s] = self._jobs_ahead_column(pname, cand_p)
         pinned = np.asarray([cj.migrated for cj in cands], bool)
-        excluded = np.asarray([n == name for n in names])
+        excluded = np.asarray(
+            [n == name or not self.sites[n].alive for n in names]
+        )
         # P2P mode: only poll peers whose advertised rows are fresh
         # enough (sorted-order staleness permuted into dict order).
         stale = self._migration_staleness(name, now)
@@ -1198,6 +1444,9 @@ class P2PGridSim(GridSim):
             wire=cfg.gossip_wire, quant=cfg.gossip_quant,
             full_sync_every=cfg.gossip_full_sync_every,
         )
+        # peer index → the home partition it held when it left (churn
+        # faults); handed back verbatim on rejoin.
+        self._departed: dict[int, list[str]] = {}
 
     def _on_stream_start(self, t0: float) -> None:
         # The construction-time view snapshot is the §IX join
@@ -1224,7 +1473,13 @@ class P2PGridSim(GridSim):
         rule group routing uses, so a user's jobs and groups agree)."""
         p = self._peer_by_site.get(sj.origin_site)
         if p is None:
-            p = stable_user_peer(sj.user, self.peers)
+            pool = self.peers
+            if self._departed:
+                pool = [
+                    pp for i, pp in enumerate(self.peers)
+                    if i not in self._departed
+                ]
+            p = stable_user_peer(sj.user, pool)
         return p
 
     # -- stale-view placement --------------------------------------------------
@@ -1235,7 +1490,15 @@ class P2PGridSim(GridSim):
         columns are whatever the last exchange advertised."""
         peer = self._submit_peer(sj)
         peer.refresh_home()
-        return comp_site_column(peer.view, self.weights) + sj.work / peer.view.cap
+        out = comp_site_column(peer.view, self.weights) + sj.work / peer.view.cap
+        alive = peer.view.alive
+        if not alive.all():
+            # Mask sites this peer BELIEVES are dead (home columns are
+            # authoritative; remote columns only as fresh as the last
+            # advert — a stale view may still aim at a dead site and
+            # bounce in _admit, which is the point).
+            out = np.where(alive, out, np.inf)
+        return out
 
     def choose_site(self, sj: SimJob) -> str:
         comp = self._comp_vec(sj)
@@ -1260,13 +1523,73 @@ class P2PGridSim(GridSim):
             for i, sj in enumerate(batch)
         ]
 
-    def _admit(self, sj: SimJob, target: str, now: float, events: list) -> None:
-        super()._admit(sj, target, now, events)
+    def _admit(self, sj: SimJob, target: str, now: float, events: list) -> str:
+        # The base may redirect a stale-view submission off a dead
+        # site; the optimistic feedback must follow the job to where
+        # it actually landed.
+        target = super()._admit(sj, target, now, events)
         # Optimistic local feedback: the submitting peer's next
         # placement sees this one. Home targets get truth on the next
         # refresh; remote targets keep the (dirty, never re-advertised)
         # estimate until the owner's advert corrects it.
         self._submit_peer(sj).note_remote_placement(target, sj.work)
+        return target
+
+    # -- peer churn (fault plan peer_leave/peer_join) --------------------------
+    def _on_fault(self, ev, now: float, events: list) -> None:
+        if ev.kind == "peer_leave":
+            self._peer_leave(int(ev.peer), now)
+        elif ev.kind == "peer_join":
+            self._peer_join(int(ev.peer), now)
+        else:
+            super()._on_fault(ev, now, events)
+
+    def _peer_leave(self, k: int, now: float) -> None:
+        """Graceful departure: the leaver hands its whole home
+        partition (authoritative refs + epoch/stamp continuity) to the
+        next active peer on the ring and drops out of the gossip
+        fan-out; its pair state is reset so any rejoin starts from a
+        table-bearing full sync."""
+        leaver = self.peers[k]
+        names = list(leaver.home_names)
+        active = [
+            i for i in range(self.num_peers)
+            if i != k and i not in self._departed
+        ]
+        succ = min(active, key=lambda i: (i - k) % self.num_peers)
+        grant = leaver.handover()
+        self.peers[succ].adopt(grant)
+        for n in names:
+            self._peer_by_site[n] = self.peers[succ]
+        self._departed[k] = names
+        self.exchange.set_active(k, False)
+
+    def _peer_join(self, k: int, now: float) -> None:
+        """Rejoin: the peer takes back exactly the partition it left
+        with (whoever holds each site now grants it back — the epoch
+        sequence continues through the handover, so receivers' strictly
+        -newer merges keep converging) and re-enters the fan-out; the
+        delta wire's forced full sync rebuilds its world view."""
+        names = self._departed.pop(k)
+        joiner = self.peers[k]
+        by_owner: dict[int, list[str]] = {}
+        for n in names:
+            owner = self._peer_by_site[n]
+            oi = next(i for i, p in enumerate(self.peers) if p is owner)
+            by_owner.setdefault(oi, []).append(n)
+        for oi, ns in by_owner.items():
+            joiner.adopt(self.peers[oi].handover(names=ns))
+        for n in names:
+            self._peer_by_site[n] = joiner
+        self.exchange.set_active(k, True)
+
+    def _reset_faults(self) -> None:
+        # Hand departed peers their partitions back before the base
+        # reset, so repeated run() calls replay churn from the
+        # construction-time layout.
+        for k in sorted(self._departed):
+            self._peer_join(k, 0.0)
+        super()._reset_faults()
 
     # -- exchange events -------------------------------------------------------
     def _on_exchange(self, now: float, events: list) -> None:

@@ -210,6 +210,15 @@ class StreamStats:
     finished: int = 0
     migrated: int = 0
     peak_in_flight: int = 0
+    #: Fault-injection counters (``SimConfig.fault_plan``): jobs
+    #: displaced from a site that went down (killed mid-run or drained
+    #: from its queue) and re-placed via the §IX migration path, and
+    #: stale-view submissions that aimed at an authoritatively-dead
+    #: site and were redirected at admission. Both are events, not
+    #: terminal states — a requeued/redirected job still finishes, so
+    #: conservation reads admitted = finished + in-flight throughout.
+    requeued: int = 0
+    redirected: int = 0
     first_arrival: float = inf
     last_finish: float = 0.0
     queue_times: StreamingQuantiles = field(default_factory=StreamingQuantiles)
@@ -222,6 +231,12 @@ class StreamStats:
             self.peak_in_flight = in_flight
         if sj.arrival < self.first_arrival:
             self.first_arrival = sj.arrival
+
+    def on_requeue(self) -> None:
+        self.requeued += 1
+
+    def on_redirect(self) -> None:
+        self.redirected += 1
 
     def on_finish(self, sj) -> None:
         self.finished += 1
@@ -238,9 +253,11 @@ class StreamStats:
             return NotImplemented
         return (
             (self.admitted, self.finished, self.migrated, self.peak_in_flight,
+             self.requeued, self.redirected,
              self.first_arrival, self.last_finish)
             == (other.admitted, other.finished, other.migrated,
-                other.peak_in_flight, other.first_arrival, other.last_finish)
+                other.peak_in_flight, other.requeued, other.redirected,
+                other.first_arrival, other.last_finish)
             and all(
                 getattr(self, f).counts == getattr(other, f).counts
                 and getattr(self, f).total == getattr(other, f).total

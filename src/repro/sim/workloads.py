@@ -23,7 +23,7 @@ from .streaming import ChunkSource
 __all__ = [
     "SimJob", "JobList", "paper_grid_spec",
     "bulk_burst", "poisson_stream", "poisson_source",
-    "cms_case_study", "serving_trace_source",
+    "diurnal_source", "cms_case_study", "serving_trace_source",
 ]
 
 
@@ -44,6 +44,12 @@ class SimJob:
     start: float = field(default=-1.0)
     finish: float = field(default=-1.0)
     migrated: bool = False
+    #: Fault-injection bookkeeping: how many times this job was
+    #: displaced (its site went down mid-run, or a stale-view placement
+    #: bounced off an authoritatively-dead site) and re-placed.
+    #: ``queue_enter`` keeps the *first* admission instant, so
+    #: ``queue_time`` spans the whole displaced wait.
+    requeues: int = 0
 
     @property
     def queue_time(self) -> float:
@@ -126,6 +132,83 @@ def poisson_source(
             if len(buf) >= chunk_jobs:
                 yield buf
                 buf = []
+        if buf:
+            yield buf
+    return ChunkSource(_chunks)
+
+
+def diurnal_source(
+    user: str,
+    base_rate_per_s: float,
+    duration_s: float,
+    amplitude: float = 0.8,
+    period_s: float = 86_400.0,
+    phase_s: float = 0.0,
+    spikes: tuple = (),
+    seed: int = 0,
+    chunk_jobs: int = 4096,
+    **job_kw,
+) -> ChunkSource:
+    """Lazy inhomogeneous-Poisson stream with a sinusoidal (diurnal)
+    rate plus scripted flash-crowd spikes.
+
+    The instantaneous rate is ``base * (1 + amplitude *
+    sin(2π (t + phase) / period))`` (``0 <= amplitude < 1`` keeps it
+    positive), sampled by Lewis–Shedler thinning against the peak rate
+    — deterministic for a given seed, and chunk boundaries stay
+    invisible to the simulator. ``spikes`` is a sequence of
+    ``(at_s, n_jobs)`` flash crowds: ``n_jobs`` extra same-instant
+    arrivals injected at ``at_s`` (a §VIII-style bulk burst riding the
+    diurnal baseline), merged into the stream in arrival order.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    spike_list = sorted((float(at), int(n)) for at, n in spikes)
+    if any(at > duration_s for at, _ in spike_list):
+        raise ValueError("spike beyond duration_s")
+    peak = base_rate_per_s * (1.0 + amplitude)
+
+    def _rate(t: float) -> float:
+        return base_rate_per_s * (
+            1.0 + amplitude * np.sin(2.0 * np.pi * (t + phase_s) / period_s)
+        )
+
+    def _chunks():
+        rng = np.random.default_rng(seed)
+        pending = list(spike_list)
+        t, buf = 0.0, []
+
+        def flush_spikes(up_to: float):
+            while pending and pending[0][0] <= up_to:
+                at, n = pending.pop(0)
+                for k in range(n):
+                    buf.append(
+                        SimJob(
+                            user=user, arrival=at, work=60.0,
+                            group_id=f"{user}-spike@{at:.0f}",
+                            **{k2: v for k2, v in job_kw.items()},
+                        )
+                        if "work" not in job_kw
+                        else SimJob(
+                            user=user, arrival=at,
+                            group_id=f"{user}-spike@{at:.0f}", **job_kw,
+                        )
+                    )
+
+        while True:
+            t += float(rng.exponential(1.0 / peak))
+            if t > duration_s:
+                break
+            accept = float(rng.uniform()) < _rate(t) / peak
+            flush_spikes(t if not accept else np.nextafter(t, 0.0))
+            if accept:
+                buf.append(SimJob(user=user, arrival=t, work=60.0, **job_kw)
+                           if "work" not in job_kw
+                           else SimJob(user=user, arrival=t, **job_kw))
+            if len(buf) >= chunk_jobs:
+                yield buf
+                buf = []
+        flush_spikes(duration_s)
         if buf:
             yield buf
     return ChunkSource(_chunks)

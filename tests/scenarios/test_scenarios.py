@@ -1,0 +1,80 @@
+"""Every scenario generator × verifier pair at smoke scale.
+
+The verifier carries the actual invariants (conservation, no dead-site
+completions, baseline envelopes, reconvergence, …) — these tests drive
+each pair end to end and pin the registry/baseline plumbing around
+them.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.scenarios import (
+    SCALES,
+    SCENARIOS,
+    baseline_path,
+    generate,
+    load_baseline,
+    run_scenario,
+)
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_smoke_run_verifies(name):
+    """Generator → sim → verifier, against the recorded baseline."""
+    spec, sim, result, metrics = run_scenario(name, scale="smoke")
+    assert spec.name == name and spec.scale == "smoke"
+    assert metrics["finished"] > 0
+    assert metrics["finished"] == result.stats.finished
+    assert len(result.jobs) >= result.stats.finished  # retain_jobs on
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_fresh_sim_is_deterministic(name):
+    """Two independent generate+run cycles of the same seed agree —
+    scenarios never depend on hidden cross-run state."""
+    m1 = run_scenario(name, scale="smoke")[3]
+    m2 = run_scenario(name, scale="smoke")[3]
+    assert m1 == m2
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_baseline_recorded_for_all_scales(name):
+    path = baseline_path(name)
+    assert path.exists(), f"missing {path}; run `python -m repro.scenarios record`"
+    recorded = json.loads(path.read_text())
+    for scale in SCALES:
+        assert scale in recorded, f"{name} baseline lacks {scale!r}"
+        entry = recorded[scale]
+        assert entry["metrics"]["finished"] > 0
+        assert 0.0 < entry["rel_tol"] < 1.0
+    assert load_baseline(name) == recorded
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_generator_scales_differ(name):
+    """Bench scale is a genuinely bigger instance, not a copy."""
+    smoke = generate(name, scale="smoke")
+    bench = generate(name, scale="bench")
+    assert smoke.params != bench.params
+    assert bench.params["duration_s"] > smoke.params["duration_s"]
+
+
+def test_registry_rejects_unknown_scenario():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        generate("not_a_scenario")
+
+
+def test_scenarios_have_fault_plans():
+    """Every scenario scripts at least one fault (diurnal_flash is the
+    deliberate plan-empty control: its faults are workload spikes)."""
+    kinds = {}
+    for name in SCENARIOS:
+        plan = generate(name, scale="smoke").fault_plan
+        kinds[name] = sorted({e.kind for e in plan.events})
+    assert kinds["site_failure"] == ["site_down", "site_up"]
+    assert kinds["peer_churn"] == ["peer_join", "peer_leave"]
+    assert kinds["wan_tiers"] == ["link_degrade", "link_restore"]
+    assert kinds["diurnal_flash"] == []

@@ -1,0 +1,72 @@
+"""Edge cases of the SimConfig legacy-kwargs compatibility shim."""
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+import repro.sim.config as config_mod
+from repro.sim import GridSim, P2PGridSim, SimConfig
+
+NODES = {"site1": 2, "site2": 2, "site3": 2}
+
+
+def test_unknown_kwarg_raises_typeerror():
+    with pytest.raises(TypeError, match=r"GridSim\(\) got unexpected keyword "
+                                        r"argument\(s\) \['bogus'\]"):
+        GridSim(NODES, bogus=1)
+
+
+def test_p2p_field_rejected_on_base_gridsim():
+    """P2P-only knobs keyword-passed to plain GridSim fail exactly like
+    the old explicit signature did."""
+    with pytest.raises(TypeError, match="num_peers"):
+        GridSim(NODES, num_peers=4)
+    with pytest.raises(TypeError, match="gossip_wire"):
+        GridSim(NODES, gossip_wire="full")
+    # ...but the same names are legal on P2PGridSim,
+    sim = P2PGridSim(NODES, num_peers=2, exchange_interval_s=30.0)
+    assert sim.num_peers == 2
+    # and harmless as unread fields of a config given to GridSim.
+    sim = GridSim(NODES, config=SimConfig(num_peers=7))
+    assert sim.config.num_peers == 7
+
+
+def test_deprecation_warning_exactly_once_per_process():
+    original = config_mod._warned_legacy
+    try:
+        config_mod._warned_legacy = False
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            GridSim(NODES, policy="greedy")
+            GridSim(NODES, policy="diana")           # second legacy use
+            GridSim(NODES, config=SimConfig())       # non-legacy use
+        legacy = [w for w in caught if issubclass(w.category, DeprecationWarning)
+                  and "deprecated" in str(w.message)]
+        assert len(legacy) == 1
+        assert "['policy']" in str(legacy[0].message)
+    finally:
+        config_mod._warned_legacy = original
+
+
+def test_unknown_kwarg_beats_deprecation_warning():
+    """A typo'd kwarg is a TypeError even before any legacy warning —
+    and must not consume the once-per-process warning budget."""
+    original = config_mod._warned_legacy
+    try:
+        config_mod._warned_legacy = False
+        with pytest.raises(TypeError):
+            GridSim(NODES, polciy="diana")
+        assert config_mod._warned_legacy is False
+    finally:
+        config_mod._warned_legacy = original
+
+
+def test_legacy_kwargs_override_config_fields():
+    cfg = SimConfig(policy="greedy", migration_interval_s=120.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sim = GridSim(NODES, config=cfg, migration_interval_s=30.0)
+    assert sim.policy == "greedy"                    # from config
+    assert sim.migration_interval_s == 30.0          # kwarg wins
+    assert cfg.migration_interval_s == 120.0         # caller's config intact

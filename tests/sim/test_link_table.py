@@ -1,0 +1,101 @@
+"""Regression: the ``_dense_failed`` known-partial link-table fallback.
+
+A link table covering only the pairs the sequential path traverses
+cannot be densified for the arrival-batch fast path. The contract:
+the first densify attempt scans S², fails, disables the fast path —
+and every later check is O(1): a known-partial table must NEVER
+silently rescan S². ``invalidate_links`` (or assigning a new table)
+is the one gate that re-arms the scan.
+"""
+from __future__ import annotations
+
+from repro.core.costs import NetworkLink
+from repro.sim import GridSim, SimConfig, SimJob, uniform_links
+
+NODES = {"site1": 2, "site2": 2, "site3": 2}
+
+
+class CountingLinks(dict):
+    """Link table counting every item lookup."""
+
+    lookups = 0
+
+    def __getitem__(self, key):
+        self.lookups += 1
+        return super().__getitem__(key)
+
+
+def _partial_links() -> CountingLinks:
+    """Full mesh minus one pair no site1-anchored workload touches."""
+    table = CountingLinks(uniform_links(list(NODES)))
+    del table[("site2", "site3")]
+    return table
+
+
+def _workload(n=12):
+    return [
+        SimJob(user="u", arrival=float(i), work=30.0, input_bytes=1e8,
+               data_site="site1", origin_site="site1")
+        for i in range(n)
+    ]
+
+
+def test_partial_table_never_rescans_dense():
+    links = _partial_links()
+    sim = GridSim(NODES, links=links, config=SimConfig(policy="diana"))
+    assert sim.batch_arrivals
+
+    # First attempt: scans, fails on the missing pair, disables.
+    assert sim._link_matrices_ready() is False
+    assert sim._dense_failed
+    assert not sim.batch_arrivals
+    assert sim._batch_arrivals_auto_disabled
+    assert links.lookups > 0
+
+    # The pinned behaviour: a known-partial table is never rescanned —
+    # the re-check is O(1) with ZERO link lookups, not a silent S² walk.
+    links.lookups = 0
+    for _ in range(3):
+        assert sim._link_matrices_ready() is False
+    assert links.lookups == 0
+
+    # The sequential fallback still runs the workload end to end.
+    res = sim.run(_workload())
+    assert res.stats.finished == 12
+    assert all(j.finish >= 0 for j in res.jobs)
+    assert sim._dense_failed and not sim.batch_arrivals
+
+
+def test_invalidate_links_rearms_densify_and_fast_path():
+    links = _partial_links()
+    sim = GridSim(NODES, links=links, config=SimConfig(policy="diana"))
+    assert sim._link_matrices_ready() is False
+
+    # Healing the table in place + invalidate_links: one new scan is
+    # allowed, succeeds, and the auto-disabled fast path comes back.
+    links[("site2", "site3")] = NetworkLink(bandwidth_Bps=1e9)
+    sim.invalidate_links()
+    assert not sim._dense_failed
+    assert sim.batch_arrivals
+    assert sim._link_matrices_ready() is True
+    assert sim._loss is not None
+
+
+def test_new_table_assignment_rearms_via_setter():
+    sim = GridSim(NODES, links=_partial_links(),
+                  config=SimConfig(policy="diana"))
+    assert sim._link_matrices_ready() is False
+    sim.links = uniform_links(list(NODES))      # setter invalidates
+    assert sim._link_matrices_ready() is True
+    assert sim.batch_arrivals
+
+
+def test_users_own_batch_arrivals_setting_survives():
+    """Auto re-enable must never override an explicit user opt-out."""
+    sim = GridSim(NODES, links=_partial_links(),
+                  config=SimConfig(policy="diana", batch_arrivals=False))
+    assert sim._link_matrices_ready() is False
+    assert not sim._batch_arrivals_auto_disabled    # was already off
+    sim.links = uniform_links(list(NODES))
+    assert sim._link_matrices_ready() is True
+    assert not sim.batch_arrivals                   # user's choice stands
