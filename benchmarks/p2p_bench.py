@@ -162,6 +162,65 @@ def smoke(sites: int, peers: int, jobs: int, seed: int = 0) -> dict:
     }
 
 
+def chaos_smoke(sites: int, peers: int, jobs: int, seed: int = 0) -> dict:
+    """CI chaos smoke for the unreliable-transport layer.
+
+    Two asserts: (1) attaching an all-zero ``TransportFaults`` must be
+    bit-identical to running with no transport model at all, under both
+    wire formats — the fault plumbing must cost nothing when every rate
+    is 0; (2) a small lossy run (10% iid loss + 2% duplication + reorder
+    jitter) must complete every job, demonstrably engage the
+    drop/retransmit machinery, and still reconverge every peer's world
+    view within a few settle rounds.
+    """
+    from repro.scenarios.common import check_all_reconverged
+    from repro.sim import TransportFaults
+
+    nodes = _grid(sites)
+    workload = _workload(sorted(nodes), jobs, seed)
+    for wire in ("full", "delta"):
+        runs = []
+        for transport in (None, TransportFaults(seed=seed + 7)):
+            sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=60.0,
+                             exchange_latency_s=2.0, gossip_wire=wire,
+                             transport_faults=transport)
+            runs.append(sim.run(copy.deepcopy(workload)))
+        a, b = runs
+        if [j.exec_site for j in a.jobs] != [j.exec_site for j in b.jobs] or [
+            j.finish for j in a.jobs
+        ] != [j.finish for j in b.jobs]:
+            raise AssertionError(
+                f"zero-rate TransportFaults (wire={wire}) diverged from the "
+                "transport-free exchange"
+            )
+
+    faults = TransportFaults(seed=seed + 1, loss=0.10, duplicate=0.02,
+                             reorder_jitter_s=3.0)
+    sim = P2PGridSim(nodes, num_peers=peers, exchange_interval_s=60.0,
+                     exchange_latency_s=2.0, transport_faults=faults)
+    res = sim.run(copy.deepcopy(workload))
+    if not all(j.finish >= 0 for j in res.jobs):
+        raise AssertionError("lossy p2p run left unfinished jobs")
+    stats = sim.exchange.stats
+    if stats.dropped == 0 or stats.retransmits == 0:
+        raise AssertionError(
+            "lossy run recorded no drops/retransmits — the fault model "
+            "never engaged"
+        )
+    rounds = check_all_reconverged(sim, res)
+    return {
+        "bench": "p2p-chaos-smoke", "sites": sites, "peers": peers,
+        "jobs": len(workload),
+        "zero_rate_identical": True,
+        "reconverge_rounds": rounds,
+        "dropped": stats.dropped,
+        "duplicated": stats.duplicated,
+        "dup_suppressed": stats.dup_suppressed,
+        "retransmits": stats.retransmits,
+        "sync_escalations": stats.sync_escalations,
+    }
+
+
 def run() -> dict:
     """Reduced size for the aggregate harness."""
     rec = bench(sites=32, peers=4, jobs=800, intervals=(30.0, 120.0, 480.0))
@@ -181,8 +240,14 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: equivalence assert, no BENCH_p2p.json")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="CI chaos smoke: zero-rate transport bit-identity "
+                         "+ lossy-run reconvergence, no BENCH_p2p.json")
     args = ap.parse_args()
-    if args.smoke:
+    if args.chaos_smoke:
+        rec = chaos_smoke(args.sites, args.peers, args.jobs, args.seed)
+        print("BENCH " + json.dumps(rec))
+    elif args.smoke:
         rec = smoke(args.sites, args.peers, args.jobs, args.seed)
         print("BENCH " + json.dumps(rec))
     else:

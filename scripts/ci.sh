@@ -25,6 +25,12 @@ python benchmarks/migration_bench.py --jobs 100 --sites 16 --smoke
 # delta-wire run must complete every job (asserts inside the bench; no
 # JSON written).
 python benchmarks/p2p_bench.py --sites 16 --peers 3 --jobs 200 --smoke
+# Chaos smoke (16 sites × 3 peers over a faulty transport): a zero-rate
+# TransportFaults must be bit-identical to no transport at all on both
+# wires, and a small lossy run (10% loss + 2% duplication + reorder
+# jitter) must drop, retransmit, finish every job and reconverge every
+# peer's world view (asserts inside the bench; no JSON written).
+python benchmarks/p2p_bench.py --sites 16 --peers 3 --jobs 200 --chaos-smoke
 # Streaming smoke (~20k jobs × 64 sites): the batched event-horizon
 # loop must stay bit-identical to the per-event reference loop (GridSim
 # AND P2PGridSim), and an open-loop lazy-ArrivalSource run must finish

@@ -58,7 +58,10 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import struct
+import zlib
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -88,6 +91,7 @@ __all__ = [
     "advert_wire_bytes",
     "encode_packet",
     "decode_packet",
+    "PacketError",
     "ACK_WIRE_BYTES",
 ]
 
@@ -146,6 +150,22 @@ class ExchangeStats:
     heartbeats_sent: int = 0
     acks_sent: int = 0
     full_syncs: int = 0
+    # -- unreliable-transport counters (zero on a reliable transport) ----
+    #: messages the fault model dropped in flight (packets and acks)
+    dropped: int = 0
+    #: extra copies the fault model injected
+    duplicated: int = 0
+    #: packets discarded at the receiver for a checksum/decode failure
+    corrupted: int = 0
+    #: packets discarded by the receiver's replay window (already seen)
+    dup_suppressed: int = 0
+    #: packets that arrived behind a later-sent packet of the same pair
+    reordered: int = 0
+    #: ack-timeout retransmissions
+    retransmits: int = 0
+    #: retransmission budgets exhausted → pair escalated to a forced
+    #: table-bearing full sync
+    sync_escalations: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -157,6 +177,13 @@ class ExchangeStats:
             "heartbeats_sent": self.heartbeats_sent,
             "acks_sent": self.acks_sent,
             "full_syncs": self.full_syncs,
+            "dropped": self.dropped,
+            "duplicated": self.duplicated,
+            "corrupted": self.corrupted,
+            "dup_suppressed": self.dup_suppressed,
+            "reordered": self.reordered,
+            "retransmits": self.retransmits,
+            "sync_escalations": self.sync_escalations,
         }
 
 
@@ -171,12 +198,26 @@ class ExchangeStats:
 ACK_WIRE_BYTES = 16
 
 _WIRE_MAGIC = b"DG"
-_WIRE_VERSION = 1
+_WIRE_VERSION = 2
 _FLAG_TABLE = 1       # packet carries the interned site-id table
 _FLAG_F16 = 2         # quantized payload is float16 (default float32)
 _FLAG_WIDE_IDS = 4    # column ids are uint32 (>65535 sites)
 _QUANT_DTYPES = {"f32": np.float32, "f16": np.float16}
-_HEADER = struct.Struct("<BBIII")  # version, flags, n_table, n_delta, n_hb
+# version, flags, pair seq, n_table, n_delta, n_hb. The pair seq is the
+# sender's per-(sender, receiver) packet counter — the receiver's replay
+# window uses it to suppress duplicates and detect reordering on an
+# unreliable transport (a retransmitted packet re-ships the identical
+# bytes, pair seq included).
+_HEADER = struct.Struct("<BBIIII")
+_CRC = struct.Struct("<I")
+
+
+class PacketError(ValueError):
+    """A wire buffer could not be decoded as a delta packet: truncated,
+    corrupted (checksum mismatch), garbage, or structurally invalid.
+    ``decode_packet`` raises this — never a bare ``struct.error`` /
+    ``IndexError`` — so receivers on a lossy transport can treat every
+    undecodable buffer as one droppable event."""
 
 
 def encode_packet(
@@ -193,6 +234,7 @@ def encode_packet(
     *,
     quant: str = "f32",
     include_table: bool = False,
+    pair_seq: int = 0,
 ) -> bytes:
     """Serialize one delta packet.
 
@@ -204,6 +246,10 @@ def encode_packet(
     owner stamp, one alive bit, and the ``QUANT_FIELDS`` + free_slots
     payload quantized to ``quant``. The heartbeat section carries
     (id, epoch echo, stamp) triplets for unchanged columns.
+    ``pair_seq`` is the per-(sender, receiver) packet counter the
+    receiver's replay window keys on; the frame ends in a CRC32 of
+    everything before it, so in-flight corruption is detected (and the
+    packet dropped) instead of merging garbage into a world view.
     """
     dtype = _QUANT_DTYPES[quant]
     wide = len(names) > 0xFFFF
@@ -222,7 +268,7 @@ def encode_packet(
     parts = [
         _WIRE_MAGIC,
         _HEADER.pack(
-            _WIRE_VERSION, flags,
+            _WIRE_VERSION, flags, pair_seq & 0xFFFFFFFF,
             len(names) if include_table else 0, n, len(hb_ids),
         ),
     ]
@@ -244,26 +290,50 @@ def encode_packet(
         np.ascontiguousarray(hb_versions, np.int64).tobytes(),
         np.ascontiguousarray(hb_stamps, np.float64).tobytes(),
     ]
-    return b"".join(parts)
+    body = b"".join(parts)
+    return body + _CRC.pack(zlib.crc32(body))
 
 
 def decode_packet(buf: bytes) -> dict:
     """Inverse of ``encode_packet``. Quantized fields come back as
     float64 (dequantized); epochs come back exactly. Returns a dict
     with ``table`` (list of names, or None when the packet carried no
-    table), the delta arrays and the heartbeat arrays."""
+    table), ``pair_seq``, the delta arrays and the heartbeat arrays.
+
+    Raises :class:`PacketError` on ANY undecodable buffer — truncated,
+    bit-flipped (the trailing CRC32 catches it), extended, or plain
+    garbage — never a bare ``struct.error``/``IndexError``."""
+    if len(buf) < 2 + _HEADER.size + _CRC.size:
+        raise PacketError(f"truncated packet ({len(buf)} bytes)")
     if buf[:2] != _WIRE_MAGIC:
-        raise ValueError("not a delta-wire packet (bad magic)")
-    ver, flags, n_table, n, n_hb = _HEADER.unpack_from(buf, 2)
+        raise PacketError("not a delta-wire packet (bad magic)")
+    (crc,) = _CRC.unpack_from(buf, len(buf) - _CRC.size)
+    body = buf[: len(buf) - _CRC.size]
+    if zlib.crc32(body) != crc:
+        raise PacketError("checksum mismatch (corrupted packet)")
+    try:
+        return _decode_body(body)
+    except PacketError:
+        raise
+    except Exception as exc:  # struct.error, IndexError, UnicodeDecodeError…
+        raise PacketError(f"malformed packet: {exc}") from exc
+
+
+def _decode_body(buf: bytes) -> dict:
+    ver, flags, pair_seq, n_table, n, n_hb = _HEADER.unpack_from(buf, 2)
     if ver != _WIRE_VERSION:
-        raise ValueError(f"unsupported wire version {ver}")
+        raise PacketError(f"unsupported wire version {ver}")
     off = 2 + _HEADER.size
     table: Optional[list[str]] = None
     if flags & _FLAG_TABLE:
         table = []
         for _ in range(n_table):
+            if off >= len(buf):
+                raise PacketError("truncated site-id table")
             ln = buf[off]
             off += 1
+            if off + ln > len(buf):
+                raise PacketError("truncated site-id table entry")
             table.append(buf[off : off + ln].decode("utf-8"))
             off += ln
     id_dt = np.uint32 if flags & _FLAG_WIDE_IDS else np.uint16
@@ -272,6 +342,8 @@ def decode_packet(buf: bytes) -> dict:
     def take(dt, count, shape=None):
         nonlocal off
         dt = np.dtype(dt)
+        if count < 0 or off + count * dt.itemsize > len(buf):
+            raise PacketError("truncated packet section")
         out = np.frombuffer(buf, dt, count=count, offset=off)
         off += count * dt.itemsize
         return out if shape is None else out.reshape(shape)
@@ -285,9 +357,12 @@ def decode_packet(buf: bytes) -> dict:
     hb_ids = take(id_dt, n_hb).astype(np.int64)
     hb_versions = take(np.int64, n_hb).copy()
     hb_stamps = take(np.float64, n_hb).copy()
+    if off != len(buf):
+        raise PacketError(f"{len(buf) - off} trailing byte(s) after packet")
     return {
         "table": table,
         "quant": "f16" if flags & _FLAG_F16 else "f32",
+        "pair_seq": int(pair_seq),
         "ids": ids,
         "versions": versions,
         "stamps": stamps,
@@ -802,12 +877,135 @@ class _PairState:
     table, set only by decoding a table-bearing packet — ids are
     meaningless until one arrived). ``sync_round`` is the round of the
     last full sync (None forces one: the join/negotiation packet).
+
+    The transport fields support the unreliable wire: ``send_seq`` is
+    the sender's per-pair packet counter (stamped into each packet
+    header); ``recv_max``/``recv_window`` are the receiver's replay
+    state — the highest pair seq seen plus a 64-bit bitmask of the
+    seqs just below it, so duplicated deliveries (fault-injected or
+    retransmitted after a lost ack) are suppressed exactly once and
+    reordering is detected without unbounded memory.
     """
 
     acked: Optional[np.ndarray] = None      # (S,) int64, -1 = never acked
     hb_stamp: Optional[np.ndarray] = None   # (S,) f64 stamp last sent
     table: Optional[list] = None
     sync_round: Optional[int] = None
+    send_seq: int = 0
+    recv_max: int = -1
+    recv_window: int = 0
+
+    def accept_seq(self, s: int) -> tuple[bool, bool]:
+        """Advance the replay window with pair seq ``s``. Returns
+        ``(fresh, reordered)``: not-fresh means duplicate (or older
+        than the 64-seq window — indistinguishable, treated the same);
+        reordered means fresh but behind an already-seen packet."""
+        if s > self.recv_max:
+            shift = s - self.recv_max
+            self.recv_window = (
+                ((self.recv_window << shift) | (1 << (shift - 1)))
+                & 0xFFFFFFFFFFFFFFFF
+                if self.recv_max >= 0 else 0
+            )
+            self.recv_max = s
+            return True, False
+        if s == self.recv_max:
+            return False, False  # window bits cover seqs BELOW the max
+        behind = self.recv_max - 1 - s
+        if behind >= 64:
+            return False, False
+        bit = 1 << behind
+        if self.recv_window & bit:
+            return False, False
+        self.recv_window |= bit
+        return True, True
+
+
+class _FailureDetector:
+    """Phi-accrual-style suspicion on the gaps between packets heard
+    from one sender (Hayashibara et al.; the DIANA WAN deployment needs
+    peers to *suspect*, not declare, silence — loss bursts and
+    partitions look identical at first). Every delivered packet —
+    heartbeat-only, duplicate, even one whose payload was then
+    discarded — is liveness evidence. ``phi(now)`` is
+    −log10 P(gap ≥ now − last) under a normal fit of the recent
+    inter-arrival gaps: ~1 per expected interval elapsed silently,
+    climbing fast once silence exceeds the observed jitter."""
+
+    __slots__ = ("last", "gaps", "_moments_c", "_suspect_c")
+
+    def __init__(self, window: int = 16):
+        self.last: Optional[float] = None
+        self.gaps: deque = deque(maxlen=window)
+        self._moments_c: Optional[tuple[float, float]] = None
+        self._suspect_c: Optional[tuple[float, float]] = None
+
+    def heard(self, now: float) -> None:
+        if self.last is not None and now > self.last:
+            self.gaps.append(now - self.last)
+            self._moments_c = None
+            self._suspect_c = None
+        self.last = max(self.last, now) if self.last is not None else now
+
+    def _moments(self) -> tuple[float, float]:
+        """Normal fit (mean, floored stddev) of the gap window, cached
+        until the next arrival — phi is queried far more often than
+        packets arrive."""
+        if self._moments_c is None:
+            m = sum(self.gaps) / len(self.gaps)
+            var = sum((g - m) ** 2 for g in self.gaps) / len(self.gaps)
+            self._moments_c = (m, max(math.sqrt(var), 0.1 * m, 1e-9))
+        return self._moments_c
+
+    @staticmethod
+    def _phi_of_gap(gap: float, m: float, s: float) -> float:
+        p = 0.5 * math.erfc((gap - m) / (s * math.sqrt(2.0)))
+        return -math.log10(max(p, 1e-30))
+
+    def phi(self, now: float) -> float:
+        if self.last is None or not self.gaps:
+            return 0.0
+        gap = now - self.last
+        if gap <= 0.0:
+            return 0.0
+        m, s = self._moments()
+        return self._phi_of_gap(gap, m, s)
+
+    def suspect_gap(self, threshold: float) -> float:
+        """Smallest silence gap at which ``phi`` reaches ``threshold``
+        — phi is monotone in the gap, so suspicion checks reduce to one
+        float comparison against this precomputed crossing (bisected on
+        the float axis once per arrival history, then cached). +inf
+        when unreachable (no gap history yet, or threshold above phi's
+        1e-30 probability clamp)."""
+        if not self.gaps:
+            return math.inf
+        c = self._suspect_c
+        if c is not None and c[0] == threshold:
+            return c[1]
+        g = math.inf
+        if threshold <= 30.0:            # -log10 clamp: phi never exceeds 30
+            m, s = self._moments()
+            hi = m + 40.0 * s
+            while self._phi_of_gap(hi, m, s) < threshold:
+                hi *= 2.0
+            lo = 0.0
+            while True:
+                mid = (lo + hi) * 0.5
+                if not lo < mid < hi:
+                    break
+                if self._phi_of_gap(mid, m, s) >= threshold:
+                    hi = mid
+                else:
+                    lo = mid
+            g = hi
+        self._suspect_c = (threshold, g)
+        return g
+
+    def mean_gap(self) -> Optional[float]:
+        if not self.gaps:
+            return None
+        return self._moments()[0]
 
 
 class GossipExchange:
@@ -829,6 +1027,24 @@ class GossipExchange:
     (``quant``: f32 default, f16 opt-in) plus heartbeats, with a full
     sync + interned-table refresh every ``full_sync_every`` rounds per
     pair; ``"full"`` is the original everything-every-round protocol.
+
+    ``transport`` attaches an unreliable-transport fault model (duck-
+    typed; canonically ``repro.sim.faults.TransportFaults``): every
+    message — delta packets, full-wire advert datagrams, and the acks
+    riding back — then passes through seeded-RNG loss (iid and
+    Gilbert–Elliott burst), duplication, reorder jitter, bit
+    corruption, and scripted partition windows before (maybe) reaching
+    the latency heap. The protocol survives it: per-pair sequence
+    numbers + a 64-seq replay window suppress duplicates and flag
+    reordering, checksums catch corruption (the packet is dropped, not
+    merged), un-acked packets retransmit on an exponential-backoff +
+    jitter timer until ``max_retransmits``, after which the pair
+    escalates to a forced table-bearing full sync, and a phi-accrual
+    failure detector per (receiver, sender) pair turns delivery
+    silence into graded suspicion (``suspected_peers``) that the
+    simulator feeds into its staleness gating. With no model attached
+    (``transport=None``) every new code path is skipped and the
+    exchange is bit-identical to the reliable-transport protocol.
     """
 
     def __init__(
@@ -840,6 +1056,7 @@ class GossipExchange:
         wire: str = "delta",
         quant: str = "f32",
         full_sync_every: int = 32,
+        transport=None,
     ):
         if wire not in ("delta", "full"):
             raise ValueError(f"wire must be 'delta' or 'full', got {wire!r}")
@@ -848,6 +1065,22 @@ class GossipExchange:
         if full_sync_every < 1:
             raise ValueError("full_sync_every must be ≥ 1")
         self.peers = list(peers)
+        self.transport = transport
+        # Seeded per-run transport state (reset_transport re-arms):
+        # the RNG every stochastic fault decision draws from, the
+        # Gilbert–Elliott bad-state bit per directed pair, and the
+        # failure detectors per (receiver, sender) pair.
+        self._t_rng = (
+            np.random.default_rng(getattr(transport, "seed", 0))
+            if transport is not None else None
+        )
+        self._ge_bad: dict[tuple[int, int], bool] = {}
+        self._fd: dict[tuple[int, int], _FailureDetector] = {}
+        # Arrival-history revision + cached earliest phi crossing, so
+        # the sim's per-event suspicion refresh is O(1) while nothing
+        # can have changed (suspicion_quiet_until).
+        self._fd_rev = 0
+        self._susp_cache: Optional[tuple[int, float]] = None
         # Liveness bits for peer churn (set_active): an inactive peer
         # neither sends nor receives and round() skips its refresh.
         # Must exist before the suppression masks below (they walk
@@ -861,13 +1094,18 @@ class GossipExchange:
         self.full_sync_every = int(full_sync_every)
         self.stats = ExchangeStats()
         self._seq = itertools.count()
-        # Heap entries: (due, seq, receiver, kind, payload) with kind
-        # "adverts" (full wire), "packet" (delta wire: (sender, bytes))
-        # or "ack" (delta wire: the acked packet's seq).
+        # Heap entries: (due, tiebreak, receiver, kind, payload) with
+        # kind "adverts" (full wire: (sender, advert list)), "packet"
+        # (delta wire: (sender, packet seq, bytes)), "ack" (delta
+        # wire: the acked packet's seq) or "rto" (retransmit timer at
+        # sender ``receiver``: (target, packet seq, attempt, interval)).
         self._in_flight: list[tuple[float, int, int, str, object]] = []
-        # Delta wire: packets sent but not yet acknowledged,
-        # seq → ((sender, receiver), advertised cols, their versions).
-        self._pending: dict[int, tuple[tuple[int, int], np.ndarray, np.ndarray]] = {}
+        # Delta wire: packets sent but not yet acknowledged, seq →
+        # ((sender, receiver), advertised cols, their versions, the
+        # encoded bytes — kept so a faulty transport can retransmit).
+        self._pending: dict[
+            int, tuple[tuple[int, int], np.ndarray, np.ndarray, bytes]
+        ] = {}
         self._pairs: dict[tuple[int, int], _PairState] = {}
         self._groups = self._tier_groups()
         self._reps = [g[0] for g in self._groups]
@@ -937,7 +1175,7 @@ class GossipExchange:
         self._active[idx] = bool(active)
         for key in [k for k in self._pairs if idx in k]:
             del self._pairs[key]
-        for seq in [s for s, (pr, _, _) in self._pending.items() if idx in pr]:
+        for seq in [s for s, e in self._pending.items() if idx in e[0]]:
             del self._pending[seq]
         self._owner_suppress = self._owner_suppression_masks()
 
@@ -994,6 +1232,285 @@ class GossipExchange:
             self._pairs[(i, j)] = st
         return st
 
+    # -- unreliable transport --------------------------------------------------
+    def reset_transport(self) -> None:
+        """Re-arm the transport fault model for a fresh run: re-seed
+        the RNG (so reruns replay the same loss/duplication/corruption
+        draws), clear the Gilbert–Elliott chain state and failure
+        detectors, and drop in-flight messages plus pending
+        retransmissions. No-op without a model attached, so the
+        reliable-transport exchange is untouched."""
+        if self.transport is None:
+            return
+        self._t_rng = np.random.default_rng(getattr(self.transport, "seed", 0))
+        self._ge_bad.clear()
+        self._fd.clear()
+        self._fd_rev += 1
+        self._susp_cache = None
+        self._in_flight.clear()
+        self._pending.clear()
+
+    def _rto_initial(self) -> float:
+        """First ack-timeout: configured ``rto_s`` if set, else four
+        one-way latencies (two RTTs of headroom) floored at 1 s."""
+        rto = getattr(self.transport, "rto_s", None)
+        if rto is not None and rto > 0.0:
+            return float(rto)
+        return max(4.0 * self.latency_s, 1.0)
+
+    def _transport_drops(self, i: int, j: int, now: float) -> bool:
+        """One loss decision for a message i→j: scripted partition
+        windows first (deterministic), then the Gilbert–Elliott burst
+        chain (one state step per message on the directed pair), then
+        iid loss. Zero-rate layers draw nothing from the RNG."""
+        t = self.transport
+        if t.partitioned(self.peers[i].home, self.peers[j].home, now):
+            return True
+        if t.burst_p > 0.0:
+            bad = self._ge_bad.get((i, j), False)
+            if bad:
+                if float(self._t_rng.random()) < t.burst_r:
+                    bad = False
+            elif float(self._t_rng.random()) < t.burst_p:
+                bad = True
+            self._ge_bad[(i, j)] = bad
+            if bad and float(self._t_rng.random()) < t.burst_loss:
+                return True
+        return t.loss > 0.0 and float(self._t_rng.random()) < t.loss
+
+    def _reorder_delay(self) -> float:
+        t = self.transport
+        if t.reorder_jitter_s <= 0.0:
+            return 0.0
+        return float(self._t_rng.random()) * t.reorder_jitter_s
+
+    def _maybe_corrupt(self, buf: bytes) -> bytes:
+        """Flip one random bit with probability ``transport.corrupt``;
+        the receiver's checksum catches it and drops the packet."""
+        t = self.transport
+        if t.corrupt <= 0.0 or float(self._t_rng.random()) >= t.corrupt:
+            return buf
+        mutated = bytearray(buf)
+        k = int(self._t_rng.integers(len(mutated)))
+        mutated[k] ^= 1 << int(self._t_rng.integers(8))
+        return bytes(mutated)
+
+    def _send_message(
+        self,
+        now: float,
+        i: int,
+        j: int,
+        kind: str,
+        payload,
+        seq_key: Optional[int] = None,
+        tiebreak: Optional[int] = None,
+    ) -> None:
+        """Route one message through the (possibly faulty) transport.
+        With no model attached this is exactly the reliable path: one
+        copy, fixed latency, applied inline at zero latency (so
+        adverts still cascade through the mesh within a round). With a
+        model, the message first survives partition/burst/iid loss;
+        each surviving copy (a duplicate may ride along) then picks up
+        reorder jitter and — for encoded packets — possible bit
+        corruption before entering the latency heap."""
+        t = self.transport
+        delays: list[float] = []
+        if t is None:
+            delays.append(0.0)
+        else:
+            if self._transport_drops(i, j, now):
+                self.stats.dropped += 1
+            else:
+                delays.append(self._reorder_delay())
+                if t.duplicate > 0.0 and float(self._t_rng.random()) < t.duplicate:
+                    self.stats.duplicated += 1
+                    delays.append(self._reorder_delay())
+        lat = max(self.latency_s, 0.0)
+        for copy_idx, extra in enumerate(delays):
+            pl = payload
+            if t is not None and kind == "packet":
+                pl = self._maybe_corrupt(pl)
+            elif t is not None and kind == "adverts" and t.corrupt > 0.0:
+                # Object payload (no bytes to flip): a corrupted
+                # full-wire datagram fails its checksum on arrival and
+                # is discarded whole; the next round re-floods it.
+                if float(self._t_rng.random()) < t.corrupt:
+                    self.stats.corrupted += 1
+                    continue
+            due = now + lat + extra
+            if due <= now:
+                if kind == "packet":
+                    self._deliver_packet(now, i, j, pl, seq_key)
+                elif kind == "adverts":
+                    self._heard(j, i, now)
+                    self.stats.adverts_applied += self.peers[j].receive(pl)
+                    self.stats.deliveries += 1
+                else:  # "ack"
+                    self._apply_ack(pl)
+                continue
+            tb = (
+                tiebreak
+                if tiebreak is not None and copy_idx == 0
+                else next(self._seq)
+            )
+            if kind == "packet":
+                hp: object = (i, seq_key, pl)
+            elif kind == "adverts":
+                hp = (i, pl)
+            else:
+                hp = pl
+            heapq.heappush(self._in_flight, (due, tb, j, kind, hp))
+
+    def _schedule_rto(
+        self, now: float, i: int, j: int, seq: int, attempt: int, interval: float
+    ) -> None:
+        """Arm (or re-arm, backed off) the ack-timeout for packet
+        ``seq``; the fire time is jittered so synchronized rounds don't
+        retransmit in lockstep."""
+        jitter = 1.0 + getattr(self.transport, "rto_jitter", 0.0) * float(
+            self._t_rng.random()
+        )
+        heapq.heappush(
+            self._in_flight,
+            (
+                now + interval * jitter,
+                next(self._seq),
+                i,
+                "rto",
+                (j, seq, attempt, interval),
+            ),
+        )
+
+    def _fire_rto(self, now: float, i: int, payload) -> None:
+        """An ack-timeout fired at sender ``i``: if the packet is still
+        un-acked, retransmit the stored bytes and back the timer off
+        exponentially; after ``max_retransmits`` attempts give up and
+        escalate — the pair's next send becomes a forced table-bearing
+        full sync that resynchronizes everything the lost packets
+        carried (and anything else that moved since)."""
+        j, pseq, attempt, interval = payload
+        entry = self._pending.get(pseq)
+        if entry is None:
+            return  # acked in time (or churn purged the pair)
+        if not (self._active[i] and self._active[j]):
+            self._pending.pop(pseq, None)
+            return
+        t = self.transport
+        if attempt > int(getattr(t, "max_retransmits", 0)):
+            self._pending.pop(pseq, None)
+            pair = self._pairs.get((i, j))
+            if pair is not None:
+                pair.sync_round = None
+            self.stats.sync_escalations += 1
+            return
+        buf = entry[3]
+        self.stats.retransmits += 1
+        self.stats.bytes_sent += len(buf)
+        self._send_message(now, i, j, "packet", buf, pseq)
+        if pseq in self._pending:  # not delivered+acked inline
+            self._schedule_rto(
+                now, i, j, pseq, attempt + 1,
+                interval * float(getattr(t, "rto_backoff", 2.0)),
+            )
+
+    def _heard(self, recv: int, sender: int, now: float) -> None:
+        """Feed the (receiver, sender) failure detector: any arrival —
+        advert datagram, delta packet, duplicate, even a corrupted
+        packet — is evidence the sender is alive. Tracked only under a
+        transport model (suspicion is meaningless on a perfect
+        network)."""
+        if self.transport is None:
+            return
+        fd = self._fd.get((recv, sender))
+        if fd is None:
+            fd = self._fd[(recv, sender)] = _FailureDetector(
+                int(getattr(self.transport, "phi_window", 16))
+            )
+        fd.heard(now)
+        self._fd_rev += 1
+
+    def suspicion_phi(self, recv: int, sender: int, now: float) -> float:
+        """Phi-accrual suspicion of ``sender`` as seen by ``recv``:
+        0.0 means just heard from (or never tracked), larger means the
+        current silence is increasingly improbable given the pair's
+        observed inter-arrival history."""
+        fd = self._fd.get((recv, sender))
+        return 0.0 if fd is None else fd.phi(now)
+
+    def suspected_peers(self, recv: int, now: float) -> set[int]:
+        """Active peers whose delivery silence toward ``recv`` pushed
+        the phi-accrual detector past ``transport.phi_threshold``.
+        Empty without a transport model. Only direct senders are ever
+        tracked — peers whose state arrives as hearsay are covered by
+        the existing per-column staleness gating instead."""
+        if self.transport is None:
+            return set()
+        thr = float(getattr(self.transport, "phi_threshold", 8.0))
+        out: set[int] = set()
+        for (r, s), fd in self._fd.items():
+            if (
+                r == recv
+                and self._active[s]
+                and fd.last is not None
+                and now - fd.last >= fd.suspect_gap(thr)
+            ):
+                out.add(s)
+        return out
+
+    def suspicion_quiet_until(self) -> float:
+        """Earliest absolute time at which any tracked pair's phi can
+        cross the suspicion threshold, assuming no further arrivals
+        (each arrival pushes its pair's crossing out). +inf with no
+        transport or no gap history. Cached per arrival history, so
+        the simulator's per-event suspicion refresh can skip all work
+        while ``now`` is below it and nobody is currently suspect."""
+        if self.transport is None:
+            return math.inf
+        cache = self._susp_cache
+        if cache is not None and cache[0] == self._fd_rev:
+            return cache[1]
+        thr = float(getattr(self.transport, "phi_threshold", 8.0))
+        due = math.inf
+        for fd in self._fd.values():
+            if fd.last is None:
+                continue
+            g = fd.suspect_gap(thr)
+            if math.isfinite(g):
+                due = min(due, fd.last + g)
+        self._susp_cache = (self._fd_rev, due)
+        return due
+
+    def suspect_mask(self, recv: int, now: float) -> Optional[np.ndarray]:
+        """Boolean mask over peer ``recv``'s view columns: True where
+        the column's owning peer is currently suspect. None when no
+        peer is suspect — the common case, so callers can skip the
+        masking work entirely."""
+        suspects = self.suspected_peers(recv, now)
+        if not suspects:
+            return None
+        bad: set[str] = set()
+        for k in suspects:
+            bad.update(self.peers[k].home_names)
+        bad -= set(self.peers[recv].home_names)  # own homes are never hearsay
+        if not bad:
+            return None
+        return np.asarray([n in bad for n in self.peers[recv].view.names])
+
+    def mean_delivery_gap(self, recv: Optional[int] = None) -> Optional[float]:
+        """Mean observed inter-arrival gap across failure detectors
+        (optionally restricted to one receiver); None before any pair
+        has two arrivals. Feeds adaptive staleness widening: when the
+        transport stretches real delivery gaps past the nominal
+        exchange interval, freshness expectations stretch with them."""
+        gaps = [
+            g
+            for (r, _s), fd in self._fd.items()
+            if recv is None or r == recv
+            for g in (fd.mean_gap(),)
+            if g is not None
+        ]
+        return (sum(gaps) / len(gaps)) if gaps else None
+
     @property
     def in_flight(self) -> int:
         return len(self._in_flight)
@@ -1012,23 +1529,27 @@ class GossipExchange:
         but count nothing here)."""
         applied = 0
         while self._in_flight and self._in_flight[0][0] <= now:
-            due, seq, j, kind, payload = heapq.heappop(self._in_flight)
+            due, _tb, j, kind, payload = heapq.heappop(self._in_flight)
             if kind == "adverts":
+                sender, adverts = payload
                 if not self._active[j]:
                     continue          # receiver departed mid-flight
-                got = self.peers[j].receive(payload)
+                self._heard(j, sender, due)
+                got = self.peers[j].receive(adverts)
                 self.stats.deliveries += 1
                 self.stats.adverts_applied += got
                 applied += got
             elif kind == "packet":
-                sender, buf = payload
+                sender, pseq, buf = payload
                 if not (self._active[j] and self._active[sender]):
                     # Either end churned while the packet was airborne:
                     # the pair state was reset, so the packet (and its
                     # pending-ack entry) is void.
-                    self._pending.pop(seq, None)
+                    self._pending.pop(pseq, None)
                     continue
-                applied += self._deliver_packet(due, sender, j, buf, seq)
+                applied += self._deliver_packet(due, sender, j, buf, pseq)
+            elif kind == "rto":  # j is the retransmitting sender here
+                self._fire_rto(due, j, payload)
             else:  # "ack" — j is the original packet's sender here
                 if not self._active[j]:
                     continue
@@ -1060,14 +1581,7 @@ class GossipExchange:
             for j in targets:
                 self.stats.adverts_sent += len(adverts)
                 self.stats.bytes_sent += size
-                if self.latency_s <= 0.0:
-                    self.stats.adverts_applied += self.peers[j].receive(adverts)
-                    self.stats.deliveries += 1
-                else:
-                    heapq.heappush(
-                        self._in_flight,
-                        (now + self.latency_s, next(self._seq), j, "adverts", adverts),
-                    )
+                self._send_message(now, i, j, "adverts", adverts)
         return self.stats
 
     # -- delta wire ------------------------------------------------------------
@@ -1114,28 +1628,44 @@ class GossipExchange:
             hb_stamps=p.stamp[hb_cols],
             quant=self.quant,
             include_table=full_sync,
+            pair_seq=pair.send_seq,
         )
+        pair.send_seq += 1
         pair.hb_stamp[cols] = p.stamp[cols]
         pair.hb_stamp[hb_cols] = p.stamp[hb_cols]
         seq = next(self._seq)
-        self._pending[seq] = ((i, j), cols, p.version[cols].copy())
+        self._pending[seq] = ((i, j), cols, p.version[cols].copy(), payload)
         self.stats.adverts_sent += len(cols)
         self.stats.heartbeats_sent += len(hb_cols)
         self.stats.bytes_sent += len(payload)
-        if self.latency_s <= 0.0:
-            self._deliver_packet(now, i, j, payload, seq)
-        else:
-            heapq.heappush(
-                self._in_flight,
-                (now + self.latency_s, seq, j, "packet", (i, payload)),
-            )
+        self._send_message(now, i, j, "packet", payload, seq, tiebreak=seq)
+        t = self.transport
+        if (
+            t is not None
+            and getattr(t, "can_lose", True)
+            and seq in self._pending
+        ):
+            # Packet not delivered+acked inline: arm its ack-timeout.
+            self._schedule_rto(now, i, j, seq, 1, self._rto_initial())
 
     def _deliver_packet(
         self, now: float, sender: int, j: int, buf: bytes, seq: int
     ) -> int:
         """Decode one delta packet at receiver ``j``, merge it, and send
-        the acknowledgement back (it rides the same latency heap)."""
-        pkt = decode_packet(buf)
+        the acknowledgement back (it rides the same latency heap and
+        the same faulty transport). Corrupted packets — checksum
+        mismatch or otherwise undecodable bytes — are dropped un-acked;
+        the sender's retransmit timer recovers them. The per-pair
+        replay window suppresses duplicates (still acked, so the
+        sender's timer stands down) and counts reordered arrivals,
+        which merge as normal: every merge path is version-gated, so a
+        stale reordered column is a no-op."""
+        self._heard(j, sender, now)
+        try:
+            pkt = decode_packet(buf)
+        except PacketError:
+            self.stats.corrupted += 1
+            return 0
         pair = self._pair(sender, j)
         if pkt["table"] is not None:
             pair.table = list(pkt["table"])
@@ -1146,6 +1676,18 @@ class GossipExchange:
             # drop the packet un-acked — the forced full sync on the
             # pair's next send resynchronizes everything it carried.
             self._pending.pop(seq, None)
+            return 0
+        fresh, reordered = pair.accept_seq(pkt["pair_seq"])
+        if reordered:
+            self.stats.reordered += 1
+        if not fresh:
+            # Duplicate: a transport-injected copy or a retransmission
+            # racing its own ack. Don't re-merge, but re-ack so the
+            # sender stops retransmitting.
+            self.stats.dup_suppressed += 1
+            self.stats.acks_sent += 1
+            self.stats.bytes_sent += ACK_WIRE_BYTES
+            self._send_message(now, j, sender, "ack", seq)
             return 0
         names = pair.table
         recv = self.peers[j]
@@ -1166,13 +1708,7 @@ class GossipExchange:
         self.stats.adverts_applied += applied
         self.stats.acks_sent += 1
         self.stats.bytes_sent += ACK_WIRE_BYTES
-        if self.latency_s <= 0.0:
-            self._apply_ack(seq)
-        else:
-            heapq.heappush(
-                self._in_flight,
-                (now + self.latency_s, next(self._seq), sender, "ack", seq),
-            )
+        self._send_message(now, j, sender, "ack", seq)
         return applied
 
     def _apply_ack(self, seq: int) -> None:
@@ -1183,7 +1719,7 @@ class GossipExchange:
         entry = self._pending.pop(seq, None)
         if entry is None:
             return
-        (i, j), cols, versions = entry
+        (i, j), cols, versions = entry[0], entry[1], entry[2]
         pair = self._pairs.get((i, j))
         if pair is None:
             return

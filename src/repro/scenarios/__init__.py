@@ -56,7 +56,14 @@ __all__ = [
     "run_scenario",
 ]
 
-SCENARIOS = ("diurnal_flash", "site_failure", "peer_churn", "wan_tiers")
+SCENARIOS = (
+    "diurnal_flash",
+    "site_failure",
+    "peer_churn",
+    "wan_tiers",
+    "lossy_wan",
+    "partition",
+)
 
 
 def _module(name: str, part: str):

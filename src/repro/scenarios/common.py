@@ -218,6 +218,90 @@ def check_reconvergence(
     )
 
 
+def _view_mismatch(
+    sim: P2PGridSim, peer, rel_tol: float = 1e-3
+) -> Optional[str]:
+    """First divergence between one peer's world view and the owning
+    peers' authoritative content (None = converged): dynamic fields to
+    quantization tolerance, alive bits exact, epochs at least as new."""
+    for i, n in enumerate(peer.view.names):
+        owner = sim._peer_by_site[n]
+        c = owner._col[n]
+        for f in ("queue", "work", "load"):
+            a = float(getattr(peer.view, f)[i])
+            b = float(getattr(owner.view, f)[c])
+            if abs(a - b) > rel_tol * max(1.0, abs(b)):
+                return f"{n}.{f}: {a} vs owner {b}"
+        if bool(peer.view.alive[i]) != bool(owner.view.alive[c]):
+            return f"{n}.alive mismatch"
+        if peer.version[i] < owner.version[c]:
+            return f"{n}: epoch {peer.version[i]} < owner {owner.version[c]}"
+    return None
+
+
+def check_all_reconverged(
+    sim: P2PGridSim,
+    result: SimResult,
+    k_rounds: int = 6,
+    rel_tol: float = 1e-3,
+) -> int:
+    """*Every* peer's world view must reconverge to the owners'
+    authoritative content within ``k_rounds`` extra gossip rounds after
+    the run — under whatever transport faults the exchange is still
+    configured with, so retransmission and full-sync escalation must
+    actually do their job. Returns the rounds needed."""
+    ex = sim.exchange
+    t = max(result.makespan, result.stats.last_finish)
+
+    def mismatch() -> Optional[str]:
+        for k, peer in enumerate(sim.peers):
+            msg = _view_mismatch(sim, peer, rel_tol)
+            if msg is not None:
+                return f"peer {k}: {msg}"
+        return None
+
+    slack = sim.exchange_latency_s + sim.exchange_interval_s
+    for r in range(1, k_rounds + 1):
+        t += sim.exchange_interval_s
+        ex.round(t)
+        ex.deliver_due(t + slack)
+        if mismatch() is None:
+            return r
+    raise ScenarioViolation(
+        f"peer views did not reconverge within {k_rounds} gossip "
+        f"rounds: {mismatch()}"
+    )
+
+
+def view_snapshot(sim: P2PGridSim) -> np.ndarray:
+    """Canonical (num_peers, 4, num_sites) stack of every peer's view
+    (queue, work, load, free) for cross-run comparison — after a
+    drained run settles, this is the idle grid as each peer sees it,
+    independent of the schedule the run actually took."""
+    return np.stack([
+        np.stack([p.view.queue, p.view.work, p.view.load, p.free])
+        for p in sim.peers
+    ])
+
+
+def check_views_equal(
+    a: np.ndarray, b: np.ndarray, what: str, rel_tol: float = 1e-3
+) -> None:
+    """Two settled view snapshots must agree to quantization tolerance
+    (f16 payloads need a looser ``rel_tol``)."""
+    if a.shape != b.shape:
+        raise ScenarioViolation(f"{what}: snapshot shapes {a.shape} vs {b.shape}")
+    err = np.abs(a - b) / np.maximum(1.0, np.abs(b))
+    worst = float(err.max()) if err.size else 0.0
+    if worst > rel_tol:
+        p, f, s = np.unravel_index(int(err.argmax()), err.shape)
+        field = ("queue", "work", "load", "free")[f]
+        raise ScenarioViolation(
+            f"{what}: settled views diverge (worst rel err {worst:.3g} "
+            f"at peer {p}, {field}, site column {s})"
+        )
+
+
 # -- baseline files --------------------------------------------------------
 def baseline_path(name: str) -> Path:
     return Path(__file__).parent / name / "baseline.json"

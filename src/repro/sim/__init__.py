@@ -1,6 +1,12 @@
 """Discrete-event grid simulator (MONARC analogue, paper §XI)."""
 from .config import SimConfig
-from .faults import FAULT_KINDS, FaultEvent, FaultPlan
+from .faults import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultPlan,
+    PartitionWindow,
+    TransportFaults,
+)
 from .grid import GridSim, P2PGridSim, SimResult, uniform_links
 from .streaming import ArrivalSource, ChunkSource, StreamingQuantiles, StreamStats
 from .workloads import (
@@ -18,6 +24,7 @@ from .workloads import (
 __all__ = [
     "GridSim", "P2PGridSim", "SimResult", "SimConfig", "uniform_links",
     "FaultEvent", "FaultPlan", "FAULT_KINDS",
+    "PartitionWindow", "TransportFaults",
     "ArrivalSource", "ChunkSource", "StreamStats", "StreamingQuantiles",
     "SimJob", "JobList", "bulk_burst", "cms_case_study", "paper_grid_spec",
     "poisson_stream", "poisson_source", "diurnal_source",

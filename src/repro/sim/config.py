@@ -28,7 +28,7 @@ from typing import Optional
 from repro.core import CostWeights
 from repro.core.topology import GridTopology
 
-from .faults import FaultPlan
+from .faults import FaultPlan, TransportFaults
 
 __all__ = ["SimConfig"]
 
@@ -83,6 +83,12 @@ class SimConfig:
     gossip_wire: str = "delta"
     gossip_quant: str = "f32"
     gossip_full_sync_every: int = 32
+    #: Optional unreliable-transport model for the gossip exchange
+    #: (``sim.faults.TransportFaults``): seeded stochastic loss /
+    #: duplication / reorder / corruption plus scripted partition
+    #: windows. None (or an all-zero model) = the classic perfectly
+    #: reliable transport.
+    transport_faults: Optional["TransportFaults"] = None
 
     def replace(self, **kw) -> "SimConfig":
         return dataclasses.replace(self, **kw)
@@ -92,6 +98,7 @@ _P2P_FIELDS = frozenset({
     "num_peers", "exchange_interval_s", "exchange_latency_s",
     "migration_max_staleness_s", "topology", "gossip_fanout",
     "gossip_wire", "gossip_quant", "gossip_full_sync_every",
+    "transport_faults",
 })
 _ALL_FIELDS = frozenset(f.name for f in dataclasses.fields(SimConfig))
 _BASE_FIELDS = _ALL_FIELDS - _P2P_FIELDS

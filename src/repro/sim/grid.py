@@ -1443,10 +1443,20 @@ class P2PGridSim(GridSim):
             latency_s=self.exchange_latency_s, fanout=gossip_fanout,
             wire=cfg.gossip_wire, quant=cfg.gossip_quant,
             full_sync_every=cfg.gossip_full_sync_every,
+            transport=cfg.transport_faults,
         )
         # peer index → the home partition it held when it left (churn
         # faults); handed back verbatim on rejoin.
         self._departed: dict[int, list[str]] = {}
+        # Suspicion cache, refreshed at gossip activity points (the
+        # placement/migration hooks have no exchange-time `now`, so
+        # they read what the last exchange/deliver event derived):
+        # peer index → suspect-column mask, plus the adaptive
+        # max-staleness widening factor. Both stay at rest without a
+        # transport model, leaving fault-free behavior untouched.
+        self._peer_index = {id(p): i for i, p in enumerate(self.peers)}
+        self._suspect_masks: dict[int, np.ndarray] = {}
+        self._staleness_widen = 1.0
 
     def _on_stream_start(self, t0: float) -> None:
         # The construction-time view snapshot is the §IX join
@@ -1498,6 +1508,14 @@ class P2PGridSim(GridSim):
             # advert — a stale view may still aim at a dead site and
             # bounce in _admit, which is the point).
             out = np.where(alive, out, np.inf)
+        mask = self._suspect_mask_for(peer)
+        if mask is not None:
+            # Prefer owner-direct knowledge: columns owned by a
+            # suspect peer carry state of unknown age, so avoid them —
+            # unless that would leave nowhere finite to place.
+            masked = np.where(mask, np.inf, out)
+            if np.isfinite(masked).any():
+                out = masked
         return out
 
     def choose_site(self, sj: SimJob) -> str:
@@ -1589,12 +1607,19 @@ class P2PGridSim(GridSim):
         # construction-time layout.
         for k in sorted(self._departed):
             self._peer_join(k, 0.0)
+        # Re-arm the unreliable transport (re-seeded RNG, cleared
+        # burst/suspicion state, dropped in-flight messages) so each
+        # run replays the same fault draws; no-op without a model.
+        self.exchange.reset_transport()
+        self._suspect_masks = {}
+        self._staleness_widen = 1.0
         super()._reset_faults()
 
     # -- exchange events -------------------------------------------------------
     def _on_exchange(self, now: float, events: list) -> None:
         self.exchange.deliver_due(now)
         self.exchange.round(now)
+        self._refresh_suspicion(now)
         if self.exchange.in_flight:
             heapq.heappush(
                 events, (self.exchange.next_due(), next(self._seq), "deliver", None)
@@ -1602,6 +1627,7 @@ class P2PGridSim(GridSim):
 
     def _on_deliver(self, now: float, events: list) -> None:
         self.exchange.deliver_due(now)
+        self._refresh_suspicion(now)
         # Chain to the next in-flight batch: with latency > interval,
         # several batches are airborne at once and the exchange event
         # may already have stopped rescheduling — every sent advert
@@ -1611,10 +1637,65 @@ class P2PGridSim(GridSim):
                 events, (self.exchange.next_due(), next(self._seq), "deliver", None)
             )
 
+    # -- suspicion (unreliable transport) --------------------------------------
+    def _refresh_suspicion(self, now: float) -> None:
+        """Re-derive the cached suspicion state from the exchange's
+        failure detectors. Columns owned by a suspect peer are masked
+        out of stale-view placement (when a finite alternative
+        remains) and treated as infinitely stale by §IX migration; and
+        while any peer is suspect, the migration trust horizon widens
+        by how far the transport has stretched real delivery gaps past
+        the nominal exchange interval (capped at 8x) — lossy silence
+        should degrade trust gradually, not disable migration."""
+        ex = self.exchange
+        if ex.transport is None:
+            return
+        if not self._suspect_masks and now < ex.suspicion_quiet_until():
+            # Nobody is suspect and no detector's phi can have crossed
+            # the threshold yet: the cached state is still exact. This
+            # is the overwhelmingly common case — the refresh runs on
+            # every delivery event.
+            return
+        masks: dict[int, np.ndarray] = {}
+        for i in range(len(self.peers)):
+            m = ex.suspect_mask(i, now)
+            if m is not None:
+                masks[i] = m
+        self._suspect_masks = masks
+        widen = 1.0
+        if masks:
+            gap = ex.mean_delivery_gap()
+            if gap is not None and gap > self.exchange_interval_s:
+                widen = min(8.0, gap / self.exchange_interval_s)
+        self._staleness_widen = widen
+
+    def _suspect_mask_for(self, peer: PeerScheduler) -> Optional[np.ndarray]:
+        if not self._suspect_masks:
+            return None
+        return self._suspect_masks.get(self._peer_index[id(peer)])
+
     # -- migration trust -------------------------------------------------------
+    @property
+    def migration_max_staleness_s(self) -> float:
+        """The configured trust horizon, widened by the cached
+        suspicion factor while the transport is misbehaving."""
+        base = self._migration_max_staleness_base
+        return base * self._staleness_widen if self._staleness_widen > 1.0 else base
+
+    @migration_max_staleness_s.setter
+    def migration_max_staleness_s(self, value: float) -> None:
+        self._migration_max_staleness_base = float(value)
+
     def _migration_staleness(self, name: str, now: float) -> Optional[np.ndarray]:
         peer = self._peer_by_site.get(name)
         if peer is None:
             return None
         peer.refresh_home()
-        return peer.staleness(now)
+        st = peer.staleness(now)
+        mask = self._suspect_mask_for(peer)
+        if mask is not None:
+            # A suspect owner's columns are infinitely stale: Q4
+            # migration won't poll a peer the failure detector says may
+            # be unreachable, whatever its last advert's age claims.
+            st = np.where(mask, np.inf, st)
+        return st

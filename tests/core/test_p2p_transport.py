@@ -1,0 +1,434 @@
+"""Unreliable-transport gossip: wire fuzzing, replay windows,
+retransmission + full-sync escalation, phi-accrual suspicion, and the
+delivery-loop edge cases around churn and empty heaps."""
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import GossipExchange, NetworkLink, PeerScheduler, SiteState
+from repro.core.p2p import (
+    PacketError,
+    _PairState,
+    decode_packet,
+    encode_packet,
+)
+from repro.sim.faults import PartitionWindow, TransportFaults
+
+
+def _grid(rng, n_sites, dead_fraction=0.0):
+    sites, links = {}, {}
+    for i in range(n_sites):
+        name = f"s{i}"
+        sites[name] = SiteState(
+            name=name, capacity=float(rng.integers(10, 2000)),
+            queue_length=float(rng.integers(0, 100)),
+            waiting_work=float(rng.uniform(0, 1000)),
+            load=float(rng.uniform(0, 1)),
+            alive=bool(rng.uniform() > dead_fraction),
+        )
+        links[name] = NetworkLink(
+            bandwidth_Bps=float(rng.uniform(1e8, 1e10)),
+            rtt_s=float(rng.uniform(0.001, 0.3)),
+        )
+    if not any(s.alive for s in sites.values()):
+        next(iter(sites.values())).alive = True
+    return sites, links
+
+
+def _peer_ring(sites, links, n_peers, **kw):
+    names = list(sites)
+    return [
+        PeerScheduler(home=names[i], sites=copy.deepcopy(sites),
+                      links=dict(links), home_sites=names[i::n_peers],
+                      order=names, **kw)
+        for i in range(min(n_peers, len(names)))
+    ]
+
+
+def _mesh(seed, n_sites=6, n_peers=3, **kw):
+    rng = np.random.default_rng(seed)
+    sites, links = _grid(rng, n_sites)
+    peers = _peer_ring(sites, links, n_peers)
+    return peers, GossipExchange(peers, **kw)
+
+
+def _valid_buffer(seed, include_table=True):
+    rng = np.random.default_rng(seed)
+    n_sites = int(rng.integers(4, 24))
+    n = int(rng.integers(0, min(6, n_sites)))
+    n_hb = int(rng.integers(0, min(6, n_sites)))
+    names = [f"site-{i:03d}" for i in range(n_sites)]
+    return encode_packet(
+        names,
+        ids=rng.choice(n_sites, size=n, replace=False),
+        qrows=rng.uniform(0, 1e4, size=(3, n)),
+        free=rng.uniform(0, 64, size=n),
+        alive=rng.uniform(size=n) > 0.3,
+        versions=rng.integers(0, 2**40, size=n).astype(np.int64),
+        stamps=rng.uniform(0, 1e6, size=n),
+        hb_ids=rng.choice(n_sites, size=n_hb, replace=False),
+        hb_versions=rng.integers(0, 2**40, size=n_hb).astype(np.int64),
+        hb_stamps=rng.uniform(0, 1e6, size=n_hb),
+        include_table=include_table,
+        pair_seq=int(rng.integers(0, 2**32)),
+    )
+
+
+def _decode_never_crashes(buf):
+    """The unreliable-transport contract: decode either succeeds or
+    raises PacketError — never struct.error / IndexError / etc."""
+    try:
+        out = decode_packet(bytes(buf))
+    except PacketError:
+        return False
+    assert isinstance(out, dict) and "ids" in out
+    return True
+
+
+class TestPacketFuzz:
+    """Satellite: byte-mutation fuzzing of ``decode_packet``."""
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_truncation_never_crashes(self, seed):
+        rng = np.random.default_rng(seed)
+        buf = _valid_buffer(seed, include_table=bool(seed % 2))
+        for _ in range(8):
+            cut = int(rng.integers(0, len(buf)))
+            # A shortened frame loses (part of) its CRC: always rejected.
+            with pytest.raises(PacketError):
+                decode_packet(buf[:cut])
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_bitflip_never_crashes(self, seed):
+        rng = np.random.default_rng(seed)
+        buf = bytearray(_valid_buffer(seed, include_table=bool(seed % 2)))
+        for _ in range(8):
+            mutated = bytearray(buf)
+            k = int(rng.integers(len(mutated)))
+            mutated[k] ^= 1 << int(rng.integers(8))
+            # CRC32 catches every single-bit flip.
+            with pytest.raises(PacketError):
+                decode_packet(bytes(mutated))
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_extension_and_garbage_never_crash(self, seed):
+        rng = np.random.default_rng(seed)
+        buf = _valid_buffer(seed)
+        extended = buf + bytes(rng.integers(0, 256, size=int(rng.integers(1, 40)), dtype=np.uint8))
+        _decode_never_crashes(extended)
+        garbage = bytes(rng.integers(0, 256, size=int(rng.integers(0, 120)), dtype=np.uint8))
+        _decode_never_crashes(garbage)
+        # Garbage wearing the right magic must still be rejected cleanly.
+        _decode_never_crashes(buf[:2] + garbage)
+
+    def test_valid_roundtrip_still_decodes(self):
+        out = decode_packet(_valid_buffer(7))
+        assert out["table"] is not None
+        assert isinstance(out["pair_seq"], int)
+
+    def test_shuffled_sections_never_crash(self):
+        rng = np.random.default_rng(3)
+        buf = bytearray(_valid_buffer(3))
+        for _ in range(16):
+            mutated = bytearray(buf)
+            a, b = rng.integers(2, len(mutated), size=2)
+            mutated[int(a)], mutated[int(b)] = mutated[int(b)], mutated[int(a)]
+            _decode_never_crashes(mutated)
+
+
+class TestReplayWindow:
+    """``_PairState.accept_seq``: duplicate suppression and reorder
+    detection over the 64-seq sliding window."""
+
+    def test_in_order_sequence_is_fresh(self):
+        p = _PairState()
+        for s in range(10):
+            assert p.accept_seq(s) == (True, False)
+
+    def test_duplicate_of_max_suppressed(self):
+        p = _PairState()
+        p.accept_seq(0)
+        p.accept_seq(1)
+        assert p.accept_seq(1) == (False, False)
+
+    def test_reorder_within_window_fresh_once(self):
+        p = _PairState()
+        p.accept_seq(0)
+        p.accept_seq(5)                       # 1..4 skipped
+        assert p.accept_seq(3) == (True, True)   # late but first time
+        assert p.accept_seq(3) == (False, False)  # then duplicate
+        assert p.accept_seq(4) == (True, True)
+
+    def test_older_than_window_suppressed(self):
+        p = _PairState()
+        p.accept_seq(0)
+        p.accept_seq(100)
+        # seq 30 is 70 behind the max: outside the 64-bit window, so
+        # it's indistinguishable from a duplicate and dropped.
+        assert p.accept_seq(30) == (False, False)
+        # 37..99 are within the window and never seen: still fresh.
+        assert p.accept_seq(50) == (True, True)
+
+    def test_window_slides_forward(self):
+        p = _PairState()
+        for s in (0, 1, 2):
+            p.accept_seq(s)
+        p.accept_seq(70)
+        assert p.accept_seq(2) == (False, False)   # fell off the window
+        assert p.accept_seq(69) == (True, True)
+
+
+class TestDeliveryEdgeCases:
+    """Satellite: deliver_due/next_due around empty heaps and churn."""
+
+    def test_next_due_empty_heap_raises(self):
+        _, ex = _mesh(0)
+        with pytest.raises(ValueError, match="no adverts in flight"):
+            ex.next_due()
+
+    def test_deliver_due_empty_heap_is_noop(self):
+        _, ex = _mesh(1)
+        assert ex.deliver_due(1e9) == 0
+
+    @pytest.mark.parametrize("wire", ["delta", "full"])
+    def test_receiver_departs_mid_flight(self, wire):
+        peers, ex = _mesh(2, wire=wire, latency_s=10.0)
+        ex.round(now=0.0)
+        assert ex.in_flight > 0
+        for k in range(1, len(peers)):
+            ex.set_active(k, False)           # everyone but 0 departs
+        ex.deliver_due(100.0)                 # packets land on the dead
+        assert ex.in_flight == 0
+        assert not ex._pending                # nothing left un-acked
+        # The survivors keep gossiping without error.
+        for k in range(1, len(peers)):
+            ex.set_active(k, True)
+        ex.round(now=200.0)
+        ex.deliver_due(300.0)
+
+    def test_sender_departs_mid_flight(self):
+        peers, ex = _mesh(3, wire="delta", latency_s=10.0)
+        ex.round(now=0.0)
+        ex.set_active(0, False)               # sender 0's packets void
+        applied = ex.deliver_due(100.0)
+        assert applied >= 0
+        assert not any(idx == 0 for (idx, _j) in ex._pairs)
+
+    def test_all_peers_inactive_round_sends_nothing(self):
+        peers, ex = _mesh(4, latency_s=5.0)
+        for k in range(len(peers)):
+            ex.set_active(k, False)
+        ex.round(now=0.0)
+        assert ex.in_flight == 0
+        assert ex.deliver_due(1e9) == 0
+
+
+def _converged(peers, value):
+    return all((p.view.queue == value).all() for p in peers)
+
+
+class TestUnreliableTransport:
+    """The tentpole protocol: loss → retransmit → ack, duplicate
+    suppression, corruption drops, escalation, suspicion."""
+
+    def _two_peer(self, transport, latency_s=1.0, **kw):
+        peers, ex = _mesh(11, n_sites=6, n_peers=2,
+                          latency_s=latency_s, transport=transport, **kw)
+        for p in peers:
+            for n in p.home_names:
+                p.authoritative[n].queue_length = 111.0
+        return peers, ex
+
+    @pytest.mark.parametrize("wire", ["delta", "full"])
+    @pytest.mark.parametrize("latency", [0.0, 5.0])
+    def test_zero_rate_transport_is_bit_identical(self, wire, latency):
+        """ISSUE acceptance: an attached all-zero TransportFaults must
+        not change a single bit of either wire's outcome."""
+        runs = []
+        for transport in (None, TransportFaults(seed=99)):
+            peers, ex = _mesh(20, wire=wire, latency_s=latency,
+                              transport=transport)
+            rng = np.random.default_rng(5)
+            for r in range(6):
+                for p in peers:
+                    for n in p.home_names:
+                        p.authoritative[n].queue_length = float(
+                            rng.integers(0, 500)
+                        )
+                t = 60.0 * r
+                ex.deliver_due(t)
+                ex.round(now=t)
+            ex.deliver_due(1e9)
+            runs.append((peers, ex))
+        (pa, ea), (pb, eb) = runs
+        for a, b in zip(pa, pb):
+            np.testing.assert_array_equal(a.view.queue, b.view.queue)
+            np.testing.assert_array_equal(a.version, b.version)
+            np.testing.assert_array_equal(a.stamp, b.stamp)
+        assert ea.stats.as_dict() == eb.stats.as_dict()
+        assert eb.stats.dropped == 0 and eb.stats.duplicated == 0
+
+    def test_partition_drop_retransmit_recovery(self):
+        """A packet lost to a short partition is retransmitted after
+        the window closes; the ack then clears the pending entry."""
+        window = PartitionWindow(
+            start=0.0, end=10.0,
+            groups=(frozenset(["s0", "s2", "s4"]), frozenset(["s1", "s3", "s5"])),
+        )
+        t = TransportFaults(seed=0, partitions=(window,), rto_jitter=0.0)
+        peers, ex = self._two_peer(t)
+        ex.round(now=5.0)                    # all cross-pair sends severed
+        assert ex.stats.dropped > 0
+        assert ex._pending                   # un-acked, timers armed
+        ex.deliver_due(60.0)                 # RTOs fire past the heal
+        assert ex.stats.retransmits > 0
+        assert not ex._pending               # retransmit got through + acked
+        assert _converged(peers, 111.0)
+
+    def test_escalation_after_max_retransmits(self):
+        """A permanently severed pair exhausts its retries and escalates
+        to a forced full sync instead of retrying forever."""
+        window = PartitionWindow(
+            start=0.0, end=1e9,
+            groups=(frozenset(["s0", "s2", "s4"]), frozenset(["s1", "s3", "s5"])),
+        )
+        t = TransportFaults(seed=0, partitions=(window,),
+                            rto_s=2.0, max_retransmits=1, rto_jitter=0.0)
+        peers, ex = self._two_peer(t)
+        ex.round(now=0.0)
+        ex.deliver_due(1000.0)
+        assert ex.stats.retransmits >= 1
+        assert ex.stats.sync_escalations >= 1
+        assert not ex._pending
+        for pair in ex._pairs.values():
+            assert pair.sync_round is None   # next send = full sync
+
+    def test_duplicate_suppressed_but_still_acked(self):
+        t = TransportFaults(seed=0, duplicate=1.0)
+        peers, ex = self._two_peer(t)
+        ex.round(now=0.0)
+        ex.deliver_due(100.0)
+        assert ex.stats.duplicated > 0
+        assert ex.stats.dup_suppressed > 0
+        assert not ex._pending               # the duplicate acked too
+        assert _converged(peers, 111.0)
+
+    def test_corrupted_packet_dropped_not_merged(self):
+        """Every copy bit-flipped: checksums drop them all, nothing
+        garbage ever reaches a view, and the pair escalates."""
+        t = TransportFaults(seed=0, corrupt=1.0, rto_s=2.0,
+                            max_retransmits=1, rto_jitter=0.0)
+        peers, ex = self._two_peer(t)
+        before = [p.view.queue.copy() for p in peers]
+        ex.round(now=0.0)
+        ex.deliver_due(1000.0)
+        assert ex.stats.corrupted > 0
+        assert ex.stats.sync_escalations >= 1
+        for p, q in zip(peers, before):
+            # Own home columns refresh locally; only foreign columns
+            # would have come over the (dead) wire.
+            foreign = ~np.isin(p.view.names, p.home_names)
+            np.testing.assert_array_equal(p.view.queue[foreign], q[foreign])
+
+    def test_reorder_jitter_reorders_and_merges(self):
+        t = TransportFaults(seed=4, reorder_jitter_s=150.0)
+        peers, ex = self._two_peer(t, latency_s=1.0)
+        rng = np.random.default_rng(0)
+        for r in range(12):
+            for p in peers:
+                for n in p.home_names:
+                    p.authoritative[n].queue_length = float(rng.integers(0, 500))
+            now = 60.0 * r
+            ex.deliver_due(now)
+            ex.round(now=now)
+        ex.deliver_due(1e9)
+        assert ex.stats.reordered > 0        # jitter > interval ⇒ overtakes
+        assert ex.stats.dropped == 0
+        # Version-gated merges make reordering harmless: views converge.
+        for p in peers:
+            for q in peers:
+                for n in q.home_names:
+                    k = list(p.view.names).index(n)
+                    assert p.view.queue[k] == q.authoritative[n].queue_length
+
+    def test_suspicion_rises_with_silence(self):
+        t = TransportFaults(seed=0, loss=1e-9, phi_threshold=3.0)
+        peers, ex = self._two_peer(t, latency_s=0.0)
+        for r in range(8):
+            ex.round(now=60.0 * r)
+            ex.deliver_due(60.0 * r)
+        # Just heard: no suspicion anywhere.
+        assert ex.suspicion_phi(0, 1, 421.0) < 1.0
+        assert ex.suspected_peers(0, 421.0) == set()
+        assert ex.suspect_mask(0, 421.0) is None
+        # A long silence is increasingly improbable vs the ~60 s gaps.
+        assert ex.suspicion_phi(0, 1, 2000.0) >= 3.0
+        assert ex.suspected_peers(0, 2000.0) == {1}
+        mask = ex.suspect_mask(0, 2000.0)
+        assert mask is not None
+        names = list(peers[0].view.names)
+        for n in peers[1].home_names:
+            assert mask[names.index(n)]
+        for n in peers[0].home_names:
+            assert not mask[names.index(n)]
+        gap = ex.mean_delivery_gap(0)
+        assert gap is not None and 50.0 <= gap <= 70.0
+
+    def test_no_transport_means_no_suspicion(self):
+        peers, ex = _mesh(12)
+        ex.round(now=0.0)
+        assert ex.suspected_peers(0, 1e9) == set()
+        assert ex.suspicion_phi(0, 1, 1e9) == 0.0
+        assert ex.mean_delivery_gap() is None
+
+    def test_lossy_runs_replay_bit_identically(self):
+        """Same seed ⇒ same drops, same retransmits, same final views
+        — across two independently built exchanges."""
+        def run():
+            t = TransportFaults(seed=7, loss=0.2, duplicate=0.1,
+                                reorder_jitter_s=10.0, corrupt=0.02)
+            peers, ex = _mesh(13, latency_s=2.0, transport=t)
+            rng = np.random.default_rng(1)
+            for r in range(10):
+                for p in peers:
+                    for n in p.home_names:
+                        p.authoritative[n].queue_length = float(
+                            rng.integers(0, 500)
+                        )
+                now = 60.0 * r
+                ex.deliver_due(now)
+                ex.round(now=now)
+            ex.deliver_due(1e9)
+            return peers, ex
+        (pa, ea), (pb, eb) = run(), run()
+        assert ea.stats.as_dict() == eb.stats.as_dict()
+        assert ea.stats.dropped > 0
+        for a, b in zip(pa, pb):
+            np.testing.assert_array_equal(a.view.queue, b.view.queue)
+
+    def test_reset_transport_clears_flight_state(self):
+        t = TransportFaults(seed=7, loss=0.3)
+        peers, ex = _mesh(14, latency_s=5.0, transport=t)
+        ex.round(now=0.0)
+        assert ex.in_flight > 0
+        ex.reset_transport()
+        assert ex.in_flight == 0
+        assert not ex._pending
+        assert ex.mean_delivery_gap() is None
+
+    def test_stats_dict_carries_transport_counters(self):
+        _, ex = _mesh(15, transport=TransportFaults(seed=0))
+        d = ex.stats.as_dict()
+        for key in ("dropped", "duplicated", "corrupted", "dup_suppressed",
+                    "reordered", "retransmits", "sync_escalations"):
+            assert key in d and d[key] == 0

@@ -1,0 +1,193 @@
+"""Build-time fault-model validation: FaultPlan coherence checking,
+PartitionWindow geometry, and TransportFaults parameter screening."""
+import math
+
+import pytest
+
+from repro.sim.faults import (
+    FaultEvent,
+    FaultPlan,
+    PartitionWindow,
+    TransportFaults,
+)
+
+
+class TestFaultPlanCoherence:
+    """Satellite: ``FaultPlan.check`` rejects incoherent histories with
+    clear errors — one test per rejection."""
+
+    def test_site_down_while_already_down(self):
+        plan = FaultPlan().site_down(10.0, "a").site_down(20.0, "a")
+        with pytest.raises(ValueError, match="already down"):
+            plan.check()
+
+    def test_site_up_never_taken_down(self):
+        plan = FaultPlan().site_up(10.0, "a")
+        with pytest.raises(ValueError, match="not down at that time"):
+            plan.check()
+
+    def test_site_up_before_its_down_is_out_of_order(self):
+        # The timestamps are swapped: the up fires chronologically
+        # before the down, so the replay sees an up for a live site.
+        plan = FaultPlan().site_down(100.0, "a").site_up(50.0, "a")
+        with pytest.raises(ValueError, match="out of order"):
+            plan.check()
+
+    def test_peer_leaves_twice(self):
+        plan = FaultPlan().peer_leave(10.0, 1).peer_leave(20.0, 1)
+        with pytest.raises(ValueError, match="already departed"):
+            plan.check()
+
+    def test_peer_join_without_leaving(self):
+        plan = FaultPlan().peer_join(10.0, 1)
+        with pytest.raises(ValueError, match="without having left"):
+            plan.check()
+
+    def test_peer_join_before_its_leave_is_out_of_order(self):
+        plan = FaultPlan().peer_leave(100.0, 2).peer_join(50.0, 2)
+        with pytest.raises(ValueError, match="out of order"):
+            plan.check()
+
+    def test_link_restore_without_degrade(self):
+        plan = FaultPlan().link_restore(10.0, site="a")
+        with pytest.raises(ValueError, match="no earlier link_degrade"):
+            plan.check()
+
+    def test_link_restore_wrong_target(self):
+        plan = (
+            FaultPlan()
+            .link_degrade(5.0, site="a", bandwidth_factor=0.5)
+            .link_restore(10.0, site="b")
+        )
+        with pytest.raises(ValueError, match="no earlier link_degrade"):
+            plan.check()
+
+    def test_out_of_chronology_insertion_still_coheres(self):
+        # Builders may append events in any order; only the
+        # time-sorted replay must make sense.
+        plan = (
+            FaultPlan()
+            .site_up(100.0, "a")
+            .site_down(50.0, "a")
+            .peer_join(80.0, 0)
+            .peer_leave(40.0, 0)
+        )
+        assert plan.check() is plan          # chains
+
+    def test_down_up_down_alternation_ok(self):
+        plan = (
+            FaultPlan()
+            .site_down(10.0, "a").site_up(20.0, "a")
+            .site_down(30.0, "a").site_up(40.0, "a")
+        )
+        plan.check()
+
+    def test_validate_runs_check_first(self):
+        plan = FaultPlan().site_up(10.0, "a")
+        with pytest.raises(ValueError, match="not down at that time"):
+            plan.validate(sites={"a"})
+
+    def test_non_finite_event_time_rejected(self):
+        for bad in (math.nan, math.inf, -math.inf):
+            with pytest.raises(ValueError, match="finite"):
+                FaultEvent(kind="site_down", time=bad, site="a")
+
+
+class TestPartitionWindow:
+    def test_end_must_follow_start(self):
+        for start, end in ((10.0, 10.0), (10.0, 5.0), (0.0, math.nan)):
+            with pytest.raises(ValueError, match="end after it starts"):
+                PartitionWindow(start=start, end=end,
+                                groups=(frozenset("a"), frozenset("b")))
+
+    def test_start_must_be_finite_nonnegative(self):
+        for bad in (-1.0, math.nan, math.inf):
+            with pytest.raises(ValueError, match="start"):
+                PartitionWindow(start=bad, end=1e9,
+                                groups=(frozenset("a"), frozenset("b")))
+
+    def test_needs_two_groups(self):
+        with pytest.raises(ValueError, match="at least two groups"):
+            PartitionWindow(start=0.0, end=1.0, groups=(frozenset("a"),))
+
+    def test_groups_must_be_non_empty(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            PartitionWindow(start=0.0, end=1.0,
+                            groups=(frozenset("a"), frozenset()))
+
+    def test_groups_must_be_disjoint(self):
+        with pytest.raises(ValueError, match="overlap"):
+            PartitionWindow(
+                start=0.0, end=1.0,
+                groups=(frozenset(["a", "b"]), frozenset(["b", "c"])),
+            )
+
+    def test_blocks_is_start_inclusive_end_exclusive(self):
+        w = PartitionWindow(start=10.0, end=20.0,
+                            groups=(frozenset(["a"]), frozenset(["b"])))
+        assert not w.blocks("a", "b", 9.999)
+        assert w.blocks("a", "b", 10.0)
+        assert w.blocks("b", "a", 19.999)
+        assert not w.blocks("a", "b", 20.0)
+
+    def test_same_group_and_unlisted_sites_flow(self):
+        w = PartitionWindow(start=0.0, end=1e9,
+                            groups=(frozenset(["a", "c"]), frozenset(["b"])))
+        assert not w.blocks("a", "c", 5.0)    # same side of the cut
+        assert not w.blocks("a", "x", 5.0)    # x in no group
+        assert not w.blocks("x", "y", 5.0)
+
+
+class TestTransportFaults:
+    def test_probabilities_screened(self):
+        for field in ("loss", "duplicate", "corrupt",
+                      "burst_p", "burst_r", "burst_loss"):
+            with pytest.raises(ValueError, match=field):
+                TransportFaults(**{field: 1.5})
+            with pytest.raises(ValueError, match=field):
+                TransportFaults(**{field: -0.1})
+
+    def test_knobs_screened(self):
+        with pytest.raises(ValueError, match="reorder_jitter_s"):
+            TransportFaults(reorder_jitter_s=-1.0)
+        with pytest.raises(ValueError, match="rto_s"):
+            TransportFaults(rto_s=0.0)
+        with pytest.raises(ValueError, match="rto_backoff"):
+            TransportFaults(rto_backoff=0.5)
+        with pytest.raises(ValueError, match="rto_jitter"):
+            TransportFaults(rto_jitter=-0.1)
+        with pytest.raises(ValueError, match="max_retransmits"):
+            TransportFaults(max_retransmits=-1)
+        with pytest.raises(ValueError, match="phi_threshold"):
+            TransportFaults(phi_threshold=0.0)
+        with pytest.raises(ValueError, match="phi_window"):
+            TransportFaults(phi_window=1)
+
+    def test_bursts_must_be_able_to_end(self):
+        with pytest.raises(ValueError, match="burst_r"):
+            TransportFaults(burst_p=0.1, burst_r=0.0)
+
+    def test_enabled_and_can_lose(self):
+        assert not TransportFaults().enabled
+        assert not TransportFaults().can_lose
+        # Duplication and jitter delay but never lose: no RTO needed.
+        dup = TransportFaults(duplicate=0.5, reorder_jitter_s=3.0)
+        assert dup.enabled and not dup.can_lose
+        for kw in (dict(loss=0.1), dict(corrupt=0.1), dict(burst_p=0.1)):
+            t = TransportFaults(**kw)
+            assert t.enabled and t.can_lose
+        w = PartitionWindow(start=0.0, end=1.0,
+                            groups=(frozenset("a"), frozenset("b")))
+        t = TransportFaults(partitions=(w,))
+        assert t.enabled and t.can_lose
+
+    def test_partitioned_unions_windows(self):
+        w1 = PartitionWindow(start=0.0, end=10.0,
+                             groups=(frozenset(["a"]), frozenset(["b"])))
+        w2 = PartitionWindow(start=20.0, end=30.0,
+                             groups=(frozenset(["a"]), frozenset(["c"])))
+        t = TransportFaults(partitions=(w1, w2))
+        assert t.partitioned("a", "b", 5.0)
+        assert not t.partitioned("a", "b", 15.0)
+        assert t.partitioned("c", "a", 25.0)
+        assert not t.partitioned("a", "b", 25.0)
