@@ -18,6 +18,11 @@ def _write_record(mod_name: str, result, rows: list[dict]) -> None:
     rec: dict = {"rows": rows}
     if isinstance(result, dict):
         rec["result"] = result
+        # Surface the generating configuration (sizes, seeds) at the
+        # top level so a record is reproducible without reading the
+        # module source.
+        if isinstance(result.get("config"), dict):
+            rec["config"] = result["config"]
     path = REPO_ROOT / f"BENCH_{mod_name}.json"
     path.write_text(json.dumps(rec, indent=2) + "\n")
 
@@ -25,16 +30,17 @@ def _write_record(mod_name: str, result, rows: list[dict]) -> None:
 def main() -> None:
     from . import (bulk_placement_bench, cms_case_study, common,
                    fig4_group_split, fig6_priority, fig7_8_queue_exec,
-                   fig9_11_migration, kernels_bench, migration_bench,
-                   p2p_bench, roofline, scenarios_bench, serving_bench,
-                   streaming_bench)
+                   fig9_11_migration, hier_bench, kernels_bench,
+                   migration_bench, p2p_bench, roofline, scenarios_bench,
+                   serving_bench, streaming_bench)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig4_group_split, fig6_priority, fig7_8_queue_exec,
                 fig9_11_migration, migration_bench, p2p_bench,
                 streaming_bench, cms_case_study, bulk_placement_bench,
-                scenarios_bench, roofline, kernels_bench, serving_bench):
+                hier_bench, scenarios_bench, roofline, kernels_bench,
+                serving_bench):
         short = mod.__name__.rsplit(".", 1)[-1]
         common.drain_records()
         try:

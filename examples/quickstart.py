@@ -162,7 +162,12 @@ for wire in ("full", "delta"):
 # The same protocol drives the simulator at scale: see
 # repro.sim.P2PGridSim (gossip_wire=/gossip_quant=) and
 # benchmarks/p2p_bench.py (bytes + makespan, compressed vs
-# uncompressed, as a function of exchange interval).
+# uncompressed, as a function of exchange interval). With a
+# GridTopology attached, GossipExchange(summaries=True) (or
+# SimConfig(gossip_summaries=True)) additionally gossips one TierSummary
+# row per RootGrid tier — min/max aggregates of the tier's §IV terms —
+# so at 10k+ sites a peer can bound whole tiers it has never received a
+# full pack row for (§11 below).
 
 # --- 8. event-horizon streaming: one SimConfig, lazy ArrivalSources -------
 # Every simulator knob lives in SimConfig now (the old keyword style
@@ -277,3 +282,44 @@ print(f"recovery: retransmits={st.retransmits} "
 phi = sim.exchange.suspicion_phi(0, 1, now=res.makespan)
 print(f"peer0's suspicion of peer1 at the end: phi={phi:.2f} "
       f"(suspect past {faults.phi_threshold})")
+
+# --- 11. hierarchical two-level placement: 10k+ sites ---------------------
+# Flat placement materializes dense (jobs × sites) float64 planes —
+# ~8 GB for the data-transfer term alone at 10k sites × 100k jobs.
+# mode="hier" aggregates each RootGrid tier of a GridTopology into a
+# summary column (an admissible optimistic lower bound over the §IV
+# net/comp/data terms), argmins every job over the small (J, T) tier
+# matrix first, and runs the dense pass only inside the winning tier —
+# widening to any runner-up tier whose bound still beats the incumbent,
+# so decisions stay bit-identical to the flat argmin. SitePack planes
+# shrink to f32 with exact f64 refinement on the shortlisted columns
+# (TierPack in repro.core.batch). On tier-structured WANs this is
+# 67x wall and ~2000x peak memory at the headline scale — 16 GB of
+# flat planes vs ~8 MB (benchmarks/hier_bench.py, BENCH_hier.json).
+from repro.core import GridTopology, Node
+
+topo = GridTopology()
+for i, name in enumerate(sites):          # reuse the §1 grid: 2 regions
+    topo.join(f"region{i % 2}", Node(name=name))
+hier_sched = DianaScheduler(dict(sites), dict(links), topology=topo)
+hier_batch = hier_sched.place_batch(
+    [Job(user="lisa", compute_work=float(w), input_bytes=5e9)
+     for w in np.linspace(1, 50, 1000)],
+    mode="hier")                          # tiers=... overrides the topology
+assert hier_batch.sites == batch.sites    # bit-identical to §5's flat pass
+print(f"\nhier placement (2 tiers): identical to flat on "
+      f"{len(hier_batch.sites)} jobs")
+
+# The simulators take the same switch: SimConfig(placement="hier",
+# topology=...) routes both run loops — batched arrivals AND the lazy
+# §IX migration pass — through the tier bounds, whole-trace identical
+# to placement="flat" (tests/sim/test_hier_sim.py pins this).
+sim_topo = GridTopology()
+for i, name in enumerate(paper_grid_spec()):
+    sim_topo.join(f"region{i % 2}", Node(name=name))
+cfg = SimConfig(policy="diana", placement="hier", topology=sim_topo,
+                migration_interval_s=60.0)
+res = GridSim(paper_grid_spec(), config=cfg).run(
+    bulk_burst("lisa", 200, work=150.0, input_bytes=1e9))
+print(f"hier GridSim run: {res.finished} finished, "
+      f"{res.migrations()} migrations")

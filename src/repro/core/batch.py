@@ -47,12 +47,15 @@ __all__ = [
     "SitePack",
     "JobPack",
     "BatchPlacement",
+    "TierPack",
     "argmin_finite",
     "class_total",
     "comp_site_column",
     "cost_components",
     "batched_cost_matrix",
     "batched_argmin",
+    "hier_select",
+    "hier_replay",
     "merge_packed_rows",
     "replay_on_pack",
     "replay_place",
@@ -562,6 +565,379 @@ def replay_place(
             sites[name].queue_length = float(sp.queue[i])
             sites[name].waiting_work = float(sp.work[i])
     return placement
+
+
+# ---------------------------------------------------------------------------
+# Two-level placement: tier summaries + pruned argmin ("hier" mode).
+#
+# A tier is a group of pack columns (a RootGrid of GridTopology, §IX).
+# Each tier carries an *admissible* optimistic summary — a lower bound
+# on every member's §IV cost built from per-component extrema
+# (min(a+b) >= min(a) + min(b)) — so jobs argmin over the (J, T) bound
+# matrix first and run the dense pass only inside the winning tier,
+# widening to runner-up tiers while their bound can still beat the
+# refined best. Refinement evaluates a cheap f32 score over the tier's
+# columns, shortlists everything within a relative tolerance of the f32
+# minimum, and re-evaluates only the shortlist in exact f64 with the
+# scalar op order — decisions and costs stay bit-identical to the flat
+# dense argmin (replay_on_pack / batched_cost_matrix+batched_argmin).
+# ---------------------------------------------------------------------------
+
+# f32 shortlist tolerance: the score is a handful (<10) of rounding
+# steps over nonnegative terms, so relative error is bounded by
+# ~10·2⁻²⁴ ≈ 6e-7; 1e-5 keeps >10x margin. Scores outside the sane
+# magnitude window (or with negative inputs, see _f32_gate) fall back
+# to exact evaluation of the whole tier.
+_F32_SHORTLIST_RTOL = 1e-5
+_F32_SHORTLIST_MIN = 1e-30
+_F32_SHORTLIST_MAX = 1e30
+# Nudge finite tier bounds down by a relative ulp-scale guard so f64
+# rounding in the bound arithmetic can never push a bound above a
+# member's true cost (which would wrongly prune the winning tier).
+_BOUND_GUARD_RTOL = 1e-12
+
+
+def _static_site_planes(sp: SitePack) -> tuple[np.ndarray, np.ndarray]:
+    """Per-site ``(net, eff_bw)`` in ``cost_components``' exact op
+    order, alive-independent (no dead poisoning)."""
+    net = (sp.loss / sp.bw) * 1.0e6
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mathis = sp.mss / (sp.rtt * np.sqrt(sp.loss))
+    eff = np.where(sp.loss > 0.0, np.minimum(sp.bw, mathis), sp.bw)
+    return net, eff
+
+
+@dataclass
+class TierPack:
+    """Tier membership + static summaries over a ``SitePack``.
+
+    Holds only *static* per-site planes (net, eff_bw — functions of the
+    link fields) plus their per-tier extrema and f32 copies for the
+    shortlist score. Dynamic state (queue/work/load/alive) is read live
+    from the ``SitePack``, so gossip merges and replay feedback need no
+    TierPack maintenance; only changes to link fields or capacity
+    require ``refresh`` (narrowable to the dirty columns).
+    """
+
+    labels: list[str]          # tier label per tier index
+    tier_of: np.ndarray        # (S,) int64 tier index per pack column
+    members: list[np.ndarray]  # per-tier ascending column indices
+    net64: np.ndarray          # (S,) float64 network term, unpoisoned
+    eff64: np.ndarray          # (S,) float64 effective bandwidth
+    net32: np.ndarray          # (S,) float32 copies for the shortlist score
+    eff32: np.ndarray
+    cap32: np.ndarray
+    net_min: np.ndarray        # (T,) per-tier extrema for the bounds
+    eff_max: np.ndarray
+    eff_min: np.ndarray
+    cap_max: np.ndarray
+    cap_min: np.ndarray
+
+    @classmethod
+    def from_site_pack(cls, sp: SitePack, tiers=None) -> "TierPack":
+        """Build the tier index over ``sp``'s columns.
+
+        ``tiers`` may be ``None`` (every site in one tier), a
+        ``{site: tier_label}`` dict (unmapped sites become singleton
+        tiers named after themselves), or a ``GridTopology`` (tier =
+        RootGrid, via ``site_tiers``).
+        """
+        names = sp.names
+        if tiers is None:
+            mapping = {n: "grid" for n in names}
+        elif isinstance(tiers, dict):
+            mapping = {n: tiers.get(n, n) for n in names}
+        elif hasattr(tiers, "site_tiers"):
+            mapping = tiers.site_tiers(names)
+        else:
+            raise TypeError(
+                f"tiers must be None, a dict or a GridTopology, got {type(tiers)!r}"
+            )
+        labels: list[str] = []
+        index: dict[str, int] = {}
+        tier_of = np.empty(len(names), np.int64)
+        groups: list[list[int]] = []
+        for i, n in enumerate(names):
+            lab = mapping[n]
+            t = index.get(lab)
+            if t is None:
+                t = len(labels)
+                index[lab] = t
+                labels.append(lab)
+                groups.append([])
+            tier_of[i] = t
+            groups[t].append(i)
+        S, T = len(names), len(labels)
+        tp = cls(
+            labels=labels,
+            tier_of=tier_of,
+            members=[np.asarray(g, np.int64) for g in groups],
+            net64=np.empty(S, np.float64),
+            eff64=np.empty(S, np.float64),
+            net32=np.empty(S, np.float32),
+            eff32=np.empty(S, np.float32),
+            cap32=np.empty(S, np.float32),
+            net_min=np.empty(T, np.float64),
+            eff_max=np.empty(T, np.float64),
+            eff_min=np.empty(T, np.float64),
+            cap_max=np.empty(T, np.float64),
+            cap_min=np.empty(T, np.float64),
+        )
+        tp.refresh(sp)
+        return tp
+
+    def refresh(self, sp: SitePack, cols: Optional[np.ndarray] = None) -> None:
+        """Recompute static planes + summaries, narrowed to ``cols``.
+
+        Call whenever link fields (bw/loss/rtt/mss) or capacity changed
+        on some columns; tier summaries are re-aggregated only for the
+        tiers containing a touched column.
+        """
+        if cols is None:
+            net, eff = _static_site_planes(sp)
+            self.net64[:] = net
+            self.eff64[:] = eff
+            self.net32[:] = self.net64.astype(np.float32)
+            self.eff32[:] = self.eff64.astype(np.float32)
+            self.cap32[:] = sp.cap.astype(np.float32)
+            touched: Sequence[int] = range(len(self.labels))
+        else:
+            cols = np.asarray(cols, np.int64)
+            if cols.size == 0:
+                return
+            loss, bw = sp.loss[cols], sp.bw[cols]
+            net = (loss / bw) * 1.0e6
+            with np.errstate(divide="ignore", invalid="ignore"):
+                mathis = sp.mss[cols] / (sp.rtt[cols] * np.sqrt(loss))
+            eff = np.where(loss > 0.0, np.minimum(bw, mathis), bw)
+            self.net64[cols] = net
+            self.eff64[cols] = eff
+            self.net32[cols] = net.astype(np.float32)
+            self.eff32[cols] = eff.astype(np.float32)
+            self.cap32[cols] = sp.cap[cols].astype(np.float32)
+            touched = np.unique(self.tier_of[cols])
+        for t in touched:
+            mem = self.members[int(t)]
+            self.net_min[t] = self.net64[mem].min()
+            self.eff_max[t] = self.eff64[mem].max()
+            self.eff_min[t] = self.eff64[mem].min()
+            self.cap_max[t] = sp.cap[mem].max()
+            self.cap_min[t] = sp.cap[mem].min()
+
+    def comp_tier_min(self, comp: np.ndarray) -> np.ndarray:
+        """Per-tier minimum of a per-site computation column."""
+        return np.asarray([comp[mem].min() for mem in self.members], np.float64)
+
+
+def _f32_gate(jp: JobPack, sp: SitePack, tp: TierPack, weights: CostWeights) -> bool:
+    """True when the f32 shortlist's relative-error bound is sound: all
+    score terms nonnegative (no cancellation) and capacities positive.
+    Otherwise refinement evaluates whole tiers in exact f64 — still
+    tier-pruned, just without the f32 narrowing."""
+    if weights.w_queue < 0.0 or weights.w_work < 0.0 or weights.w_load < 0.0:
+        return False
+
+    def nn(a: np.ndarray) -> bool:  # nonnegative, NaN-rejecting
+        return bool(np.all(a >= 0.0))
+
+    return (
+        nn(tp.net64)
+        and nn(tp.eff64)
+        and nn(sp.queue)
+        and nn(sp.work)
+        and nn(sp.load)
+        and nn(jp.work)
+        and nn(jp.bytes_)
+        and bool(np.all(sp.cap > 0.0))
+        and bool(np.all(np.isfinite(sp.cap)))
+    )
+
+
+def _hier_argmin_row(
+    tp: TierPack,
+    sp: SitePack,
+    cls: JobClass,
+    bytes_j: float,
+    work_j: float,
+    comp_base: np.ndarray,
+    comp_min: np.ndarray,
+    use32: bool,
+) -> tuple[int, float]:
+    """One job's two-level argmin: ``(column, cost)`` bit-identical to
+    ``argmin_finite`` over the flat dense row, or ``(-1, inf)`` when no
+    alive/finite column exists.
+
+    ``comp_base`` is the job-independent computation column (the full
+    per-job term is ``comp_base + work_j / cap``); ``comp_min`` its
+    per-tier minimum, maintained by the caller.
+    """
+    has_comp = cls is not JobClass.DATA
+    has_dtc = cls is not JobClass.COMPUTE
+    comp_lb = None
+    if has_comp:
+        if work_j >= 0.0:
+            wterm = work_j / tp.cap_max
+        else:
+            wterm = work_j / tp.cap_min
+        comp_lb = comp_min + wterm
+    dtc_lb = None
+    if has_dtc:
+        if bytes_j == 0.0:
+            # 0/eff is 0 for every finite eff; the shortcut dodges the
+            # 0/0 NaN an all-zero-bandwidth tier would inject.
+            dtc_lb = np.zeros(len(tp.labels))
+        else:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                dtc_lb = bytes_j / (tp.eff_max if bytes_j > 0.0 else tp.eff_min)
+    bound = np.asarray(class_total(cls, tp.net_min, comp_lb, dtc_lb), np.float64)
+    # NaN bounds (degenerate link values) carry no pruning information:
+    # force them to -inf so the tier is always refined, never skipped.
+    bad = np.isnan(bound)
+    if bad.any():
+        bound[bad] = -np.inf
+    fin = np.isfinite(bound)
+    bound[fin] -= np.abs(bound[fin]) * _BOUND_GUARD_RTOL
+
+    best_cost = np.inf
+    best_col = -1
+    for t in np.argsort(bound, kind="stable"):
+        t = int(t)
+        # <= (not <): a runner-up tier whose bound ties the refined best
+        # may hold an equal-cost column with a *lower* index, and the
+        # flat argmin's first-index tie-break would pick it.
+        if bound[t] > best_cost:
+            break
+        cols = tp.members[t]
+        short = cols
+        if use32:
+            with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+                if cls is JobClass.DATA:
+                    score = (np.float32(bytes_j) / tp.eff32[cols]) + tp.net32[cols]
+                else:
+                    comp32 = comp_base[cols].astype(np.float32) + np.float32(
+                        work_j
+                    ) / tp.cap32[cols]
+                    if cls is JobClass.COMPUTE:
+                        score = comp32 + tp.net32[cols]
+                    else:
+                        score = (tp.net32[cols] + comp32) + (
+                            np.float32(bytes_j) / tp.eff32[cols]
+                        )
+            dead32 = ~sp.alive[cols]
+            if dead32.any():
+                score[dead32] = np.inf
+            m32 = float(score.min())
+            if _F32_SHORTLIST_MIN < m32 < _F32_SHORTLIST_MAX:
+                short = cols[score <= m32 * (1.0 + _F32_SHORTLIST_RTOL)]
+        # Exact f64 refinement on the shortlist: elementwise ops on
+        # column slices equal the sliced full-vector results, so these
+        # values match the flat dense row bit for bit.
+        comp_s = None
+        if has_comp:
+            comp_s = comp_base[short] + work_j / sp.cap[short]
+        dtc_s = None
+        if has_dtc:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                dtc_s = bytes_j / tp.eff64[short]
+        row = np.asarray(class_total(cls, tp.net64[short], comp_s, dtc_s), np.float64)
+        deads = ~sp.alive[short]
+        if deads.any():
+            row[deads] = np.inf
+        k = int(np.argmin(row))
+        c = float(row[k])
+        if np.isfinite(c):
+            col = int(short[k])
+            if c < best_cost or (c == best_cost and col < best_col):
+                best_cost, best_col = c, col
+    return best_col, best_cost
+
+
+def hier_select(
+    jp: JobPack,
+    sp: SitePack,
+    tp: TierPack,
+    weights: CostWeights = CostWeights(),
+) -> BatchPlacement:
+    """Two-level equivalent of
+    ``batched_argmin(batched_cost_matrix(jp, sp, weights), sp)`` —
+    snapshot costs, no between-row feedback — without ever
+    materializing the (J, S) plane."""
+    comp_site = comp_site_column(sp, weights)
+    comp_min = tp.comp_tier_min(comp_site)
+    use32 = _f32_gate(jp, sp, tp, weights)
+    J = len(jp.classes)
+    idx = np.empty(J, np.int64)
+    costs = np.empty(J, np.float64)
+    for j in range(J):
+        col, c = _hier_argmin_row(
+            tp, sp, jp.classes[j],
+            float(jp.bytes_[j]), float(jp.work[j]),
+            comp_site, comp_min, use32,
+        )
+        if col < 0:
+            raise RuntimeError("no alive site available")
+        idx[j] = col
+        costs[j] = c
+    return BatchPlacement(
+        site_indices=idx,
+        sites=[sp.names[i] for i in idx],
+        costs=costs,
+        classes=list(jp.classes),
+    )
+
+
+def hier_replay(
+    jp: JobPack,
+    sp: SitePack,
+    tp: TierPack,
+    weights: CostWeights = CostWeights(),
+) -> BatchPlacement:
+    """Two-level equivalent of ``replay_on_pack(jp, sp, weights)``:
+    same sequential queue/work feedback between rows (written back to
+    the pack), same choices and costs, but each row is resolved through
+    the tier bounds instead of a dense (S,) scan."""
+    comp_base = comp_site_column(sp, weights).copy()
+    comp_min = tp.comp_tier_min(comp_base)
+    use32 = _f32_gate(jp, sp, tp, weights)
+    q = sp.queue.copy()
+    w = sp.work.copy()
+    wq, ww = weights.w_queue, weights.w_work
+    load_term = weights.w_load * sp.load
+    cap = sp.cap
+    J = len(jp.classes)
+    site_idx = np.empty(J, np.int64)
+    costs = np.empty(J, np.float64)
+    for j in range(J):
+        col, c = _hier_argmin_row(
+            tp, sp, jp.classes[j],
+            float(jp.bytes_[j]), float(jp.work[j]),
+            comp_base, comp_min, use32,
+        )
+        if col < 0:
+            raise RuntimeError("no alive site available")
+        site_idx[j] = col
+        costs[j] = c
+        s = col
+        q[s] += 1.0
+        w[s] += jp.work[j]
+        old = comp_base[s]
+        # Same elementwise expression as comp_site_column so the value
+        # stays bit-identical to a full recomputation (replay_on_pack).
+        comp_base[s] = (wq * q[s] / cap[s] + ww * w[s] / cap[s]) + load_term[s]
+        t = int(tp.tier_of[s])
+        if comp_base[s] < comp_min[t]:
+            comp_min[t] = comp_base[s]
+        elif old == comp_min[t] and comp_base[s] != old:
+            # The tier minimum itself moved up: re-aggregate exactly.
+            comp_min[t] = comp_base[tp.members[t]].min()
+    sp.queue[:] = q
+    sp.work[:] = w
+    return BatchPlacement(
+        site_indices=site_idx,
+        sites=[sp.names[i] for i in site_idx],
+        costs=costs,
+        classes=jp.classes,
+    )
 
 
 # Resolve scheduler's lazy "BatchPlacement" return annotations at runtime

@@ -23,8 +23,11 @@ from .batch import (
     BatchPlacement,
     JobPack,
     SitePack,
+    TierPack,
     batched_argmin,
     batched_cost_matrix,
+    hier_replay,
+    hier_select,
     replay_on_pack,
 )
 
@@ -76,6 +79,17 @@ class PlacementEngine:
         mutates the pack's queue/work columns (the caller commits them
         wherever its authority lives)."""
         return replay_on_pack(jp, sp, self.weights)
+
+    # -- two-level ("hier") variants ------------------------------------------
+    def select_hier(self, jp: JobPack, sp: SitePack, tp: TierPack) -> BatchPlacement:
+        """``select`` through the tier bounds — bit-identical choices
+        and costs without materializing the (J, S) plane."""
+        return hier_select(jp, sp, tp, self.weights)
+
+    def replay_hier(self, jp: JobPack, sp: SitePack, tp: TierPack) -> BatchPlacement:
+        """``replay`` through the tier bounds — bit-identical, including
+        the pack's queue/work feedback."""
+        return hier_replay(jp, sp, tp, self.weights)
 
     # -- convenience ----------------------------------------------------------
     def pack_jobs(

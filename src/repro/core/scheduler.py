@@ -78,10 +78,14 @@ class DianaScheduler:
         sites: dict[str, SiteState],
         links: dict[str, NetworkLink],
         weights: CostWeights = CostWeights(),
+        topology=None,
     ):
         self.sites = sites
         self.links = links
         self.weights = weights
+        # Optional GridTopology: the default tier structure for the
+        # two-level batch paths (mode="hier"). None = one flat tier.
+        self.topology = topology
 
     @property
     def engine(self):
@@ -161,25 +165,63 @@ class DianaScheduler:
         self,
         jobs: Sequence[Job],
         job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+        *,
+        mode: str = "flat",
+        tiers=None,
     ) -> "BatchPlacement":
         """Batched ``select_site`` (no state commit — every job sees the
-        same snapshot, exactly like J independent ``select_site`` calls)."""
+        same snapshot, exactly like J independent ``select_site`` calls).
+
+        ``mode="hier"`` routes through the two-level tier-bound path
+        (bit-identical decisions, no (J, S) plane); ``tiers`` overrides
+        the scheduler's ``topology`` as the tier structure.
+        """
         from . import batch as _batch
 
         sp = _batch.SitePack.from_scheduler(self.sites, self.links)
-        return self.engine.select(self.engine.pack_jobs(jobs, job_classes), sp)
+        jp = self.engine.pack_jobs(jobs, job_classes)
+        if mode == "hier":
+            tp = _batch.TierPack.from_site_pack(
+                sp, self.topology if tiers is None else tiers
+            )
+            return self.engine.select_hier(jp, sp, tp)
+        if mode != "flat":
+            raise ValueError(f"mode must be 'flat' or 'hier', got {mode!r}")
+        return self.engine.select(jp, sp)
 
     def place_batch(
         self,
         jobs: Sequence[Job],
         job_classes: Optional[Sequence[Optional[JobClass]]] = None,
+        *,
+        mode: str = "flat",
+        tiers=None,
     ) -> "BatchPlacement":
         """Batched ``place`` loop: the §IV planes are evaluated once and
         the per-placement queue feedback is replayed between rows, so
         assignments, costs and final site state are bit-identical to
-        ``[self.place(j) for j in jobs]``."""
+        ``[self.place(j) for j in jobs]``.
+
+        ``mode="hier"`` commits the same placements through the
+        two-level tier-bound path (see ``select_sites_batch``).
+        """
         from . import batch as _batch
 
+        if mode == "hier":
+            sp = _batch.SitePack.from_scheduler(self.sites, self.links)
+            jp = self.engine.pack_jobs(jobs, job_classes)
+            tp = _batch.TierPack.from_site_pack(
+                sp, self.topology if tiers is None else tiers
+            )
+            placement = self.engine.replay_hier(jp, sp, tp)
+            for job, name in zip(jobs, placement.sites):
+                job.site = name
+            for i, name in enumerate(sp.names):
+                self.sites[name].queue_length = float(sp.queue[i])
+                self.sites[name].waiting_work = float(sp.work[i])
+            return placement
+        if mode != "flat":
+            raise ValueError(f"mode must be 'flat' or 'hier', got {mode!r}")
         return _batch.replay_place(
             jobs, self.sites, self.links, self.weights, job_classes, commit=True
         )

@@ -15,11 +15,9 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
 __all__ = ["Node", "SubGrid", "RootGrid", "GridTopology"]
-
-_uid = itertools.count(1)
 
 
 @dataclass
@@ -28,7 +26,11 @@ class Node:
     capacity: float = 1.0
     availability: float = 1.0        # §IX: root should maximize availability
     alive: bool = True
-    uid: int = field(default_factory=lambda: next(_uid))
+    # 0 = "not yet joined": GridTopology.join assigns the next uid from
+    # its own per-topology counter, so standby-election tie-breaks
+    # (availability, -uid) depend only on this topology's join order —
+    # never on how many Nodes other tests/topologies created first.
+    uid: int = 0
 
 
 @dataclass
@@ -105,20 +107,37 @@ class GridTopology:
 
     def __init__(self) -> None:
         self.rootgrids: dict[str, RootGrid] = {}
+        self._uid = itertools.count(1)
+
+    @staticmethod
+    def _least_loaded_subgrid(root: RootGrid) -> SubGrid:
+        """Deterministic SubGrid pick: fewest nodes, name tie-break."""
+        return min(root.subgrids.values(), key=lambda sg: (len(sg.nodes), sg.name))
 
     def join(self, site: str, node: Node, nearest: Optional[str] = None) -> RootGrid:
         """§IX join protocol.
 
         If the site has no RootGrid yet, this peer creates it (and its
         first SubGrid). Small sites may instead join an existing
-        SubGrid at ``nearest``.
+        SubGrid at ``nearest``. A ``site`` that already has its own
+        RootGrid always routes there; naming a *different* existing
+        RootGrid as ``nearest`` is a conflict and raises. Within the
+        chosen RootGrid the node lands in the least-loaded SubGrid
+        (fewest nodes, name tie-break), not an arbitrary first one.
         """
-        if nearest is not None and nearest in self.rootgrids:
-            root = self.rootgrids[nearest]
-            sg = next(iter(root.subgrids.values()))
-            root.node_joined(sg.name, node)
-            return root
-        if site not in self.rootgrids:
+        if node.uid == 0:
+            node.uid = next(self._uid)
+        target: Optional[str] = None
+        if site in self.rootgrids:
+            if nearest is not None and nearest != site and nearest in self.rootgrids:
+                raise ValueError(
+                    f"join: site {site!r} already has its own RootGrid; "
+                    f"nearest={nearest!r} names a different one"
+                )
+            target = site
+        elif nearest is not None and nearest in self.rootgrids:
+            target = nearest
+        if target is None:
             root = RootGrid(site=site, master=node)
             sg = SubGrid(name=f"{site}/sg0")
             sg.add(node)
@@ -126,8 +145,8 @@ class GridTopology:
             root._elect_standby()
             self.rootgrids[site] = root
             return root
-        root = self.rootgrids[site]
-        sg = next(iter(root.subgrids.values()))
+        root = self.rootgrids[target]
+        sg = self._least_loaded_subgrid(root)
         root.node_joined(sg.name, node)
         return root
 
@@ -143,6 +162,35 @@ class GridTopology:
     def peers(self, site: str) -> list[str]:
         """RootGrid↔RootGrid peer list (excludes self)."""
         return [s for s in self.rootgrids if s != site]
+
+    # -- tier index (two-level placement) -------------------------------
+    #
+    # A "tier" is a RootGrid: scheduler sites that are RootGrid sites map
+    # to themselves, sites that joined another RootGrid (as nodes) map to
+    # that RootGrid's site, and sites unknown to the topology form
+    # singleton tiers named after themselves. Mirrors the grouping
+    # ``p2p.PeerScheduler._rootgrid_of`` uses for gossip fan-out, so the
+    # placement hierarchy and the gossip hierarchy agree.
+
+    def tier_of(self, site: str) -> str:
+        """Tier label (RootGrid site) for a scheduler site name."""
+        if site in self.rootgrids:
+            return site
+        for root_site, root in self.rootgrids.items():
+            if site in root.node_table:
+                return root_site
+        return site
+
+    def site_tiers(self, names: Sequence[str]) -> dict[str, str]:
+        """Map each site name to its tier label."""
+        return {name: self.tier_of(name) for name in names}
+
+    def tier_members(self, names: Sequence[str]) -> dict[str, list[str]]:
+        """Tier label → member site names (order preserved from ``names``)."""
+        members: dict[str, list[str]] = {}
+        for name in names:
+            members.setdefault(self.tier_of(name), []).append(name)
+        return members
 
     def fail_site_master(self, site: str) -> bool:
         return self.rootgrids[site].fail_master()

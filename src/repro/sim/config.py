@@ -72,13 +72,22 @@ class SimConfig:
     #: stream identically by both run loops. None = the classic
     #: always-alive grid.
     fault_plan: Optional["FaultPlan"] = None
+    #: Placement evaluation path for the diana policy: ``"flat"`` scans
+    #: every site per decision; ``"hier"`` runs the two-level tier-bound
+    #: argmin (tiers = ``topology`` RootGrids, or one tier without a
+    #: topology) — decisions are bit-identical, the dense pass just
+    #: shrinks to the winning tier(s).
+    placement: str = "flat"
+    #: RootGrid/SubGrid control-plane topology. ``P2PGridSim`` uses it
+    #: for hierarchical gossip fan-out; both simulators use it as the
+    #: tier structure when ``placement="hier"``.
+    topology: Optional[GridTopology] = None
 
     # -- P2PGridSim only --------------------------------------------------
     num_peers: int = 3
     exchange_interval_s: float = 60.0
     exchange_latency_s: float = 0.0
     migration_max_staleness_s: Optional[float] = None
-    topology: Optional[GridTopology] = None
     gossip_fanout: Optional[int] = None
     gossip_wire: str = "delta"
     gossip_quant: str = "f32"
@@ -89,6 +98,13 @@ class SimConfig:
     #: windows. None (or an all-zero model) = the classic perfectly
     #: reliable transport.
     transport_faults: Optional["TransportFaults"] = None
+    #: Gossip tier summaries (requires ``topology``): cross-tier rounds
+    #: send one summary row per RootGrid instead of dense per-site
+    #: rows (dense rows still flow within a tier). Shrinks cross-tier
+    #: gossip from O(sites) to O(tiers) — an at-scale approximation:
+    #: cross-tier dense rows stop refreshing, so placement is NOT
+    #: bit-identical to dense gossip.
+    gossip_summaries: bool = False
 
     def replace(self, **kw) -> "SimConfig":
         return dataclasses.replace(self, **kw)
@@ -96,9 +112,9 @@ class SimConfig:
 
 _P2P_FIELDS = frozenset({
     "num_peers", "exchange_interval_s", "exchange_latency_s",
-    "migration_max_staleness_s", "topology", "gossip_fanout",
+    "migration_max_staleness_s", "gossip_fanout",
     "gossip_wire", "gossip_quant", "gossip_full_sync_every",
-    "transport_faults",
+    "transport_faults", "gossip_summaries",
 })
 _ALL_FIELDS = frozenset(f.name for f in dataclasses.fields(SimConfig))
 _BASE_FIELDS = _ALL_FIELDS - _P2P_FIELDS

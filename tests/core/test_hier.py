@@ -1,0 +1,313 @@
+"""Two-level ("hier") placement equivalence suite.
+
+The hierarchical path prunes with per-tier admissible lower bounds and
+f32 shortlist packs, then refines exactly — so every observable output
+(site choices, costs, queue/work feedback, migration reason strings)
+must be **bit-identical** to the flat dense argmin. These tests sweep
+random topologies, tier skews and dirty-column refresh interleavings
+to enforce that contract.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # offline CI: vendored shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    CostWeights,
+    DianaScheduler,
+    GridTopology,
+    Job,
+    JobClass,
+    NetworkLink,
+    Node,
+    SiteState,
+)
+from repro.core.batch import (
+    JobPack,
+    SitePack,
+    TierPack,
+    batched_argmin,
+    batched_cost_matrix,
+    hier_replay,
+    hier_select,
+    replay_on_pack,
+)
+from repro.core.migration import (
+    select_peer_targets,
+    select_peer_targets_lazy,
+    select_peers_batch,
+)
+
+
+def _grid(rng, n_sites, dead_fraction=0.2):
+    sites, links = {}, {}
+    for i in range(n_sites):
+        name = f"s{i:03d}"
+        sites[name] = SiteState(
+            name=name, capacity=float(rng.integers(10, 2000)),
+            queue_length=float(rng.integers(0, 100)),
+            waiting_work=float(rng.uniform(0, 1000)),
+            load=float(rng.uniform(0, 1)),
+            alive=bool(rng.uniform() > dead_fraction),
+        )
+        links[name] = NetworkLink(
+            bandwidth_Bps=float(rng.uniform(1e6, 1e10)),
+            loss_rate=0.0 if rng.uniform() < 0.3 else float(rng.uniform(1e-4, 0.05)),
+            rtt_s=float(rng.uniform(0.001, 0.3)),
+        )
+    if not any(s.alive for s in sites.values()):
+        next(iter(sites.values())).alive = True
+    return sites, links
+
+
+def _jobs(rng, n):
+    """Job mix with the degenerate corners the shortlist must survive:
+    zero-byte and zero-work rows, heavy-tailed sizes."""
+    jobs = []
+    for i in range(n):
+        jobs.append(Job(
+            user=f"u{i % 3}",
+            compute_work=float(rng.choice([0.0, rng.uniform(0.1, 200)])),
+            input_bytes=float(rng.choice([0.0, rng.uniform(0, 50e9)])),
+            output_bytes=float(rng.choice([0.0, rng.uniform(0, 1e9)])),
+        ))
+    return jobs
+
+
+def _skewed_tiers(rng, names, n_tiers):
+    """Random tier map with skew: some huge tiers, some singletons."""
+    if n_tiers <= 1:
+        return {n: "t0" for n in names}
+    weights = rng.uniform(0.05, 1.0, n_tiers) ** 3
+    weights /= weights.sum()
+    assignment = rng.choice(n_tiers, size=len(names), p=weights)
+    return {n: f"t{int(t)}" for n, t in zip(names, assignment)}
+
+
+def _weights(rng):
+    return CostWeights(
+        w_queue=float(rng.uniform(0, 2)),
+        w_work=float(rng.uniform(0, 2)),
+        w_load=float(rng.uniform(0, 2)),
+    )
+
+
+class TestHierEquivalence:
+    @given(seed=st.integers(0, 100_000), n_sites=st.integers(2, 64),
+           n_tiers=st.integers(1, 9), n_jobs=st.integers(1, 40))
+    @settings(max_examples=40, deadline=None)
+    def test_select_bit_identical_to_flat(self, seed, n_sites, n_tiers, n_jobs):
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, n_sites)
+        w = _weights(rng)
+        tiers = _skewed_tiers(rng, list(sites), n_tiers)
+        sp = SitePack.from_scheduler(sites, links)
+        jp = JobPack.from_jobs(_jobs(rng, n_jobs))
+        tp = TierPack.from_site_pack(sp, tiers)
+
+        flat = batched_argmin(batched_cost_matrix(jp, sp, w), sp)
+        hier = hier_select(jp, copy.deepcopy(sp), tp, w)
+
+        assert hier.sites == flat.sites
+        assert list(hier.costs) == list(flat.costs)          # exact floats
+
+    @given(seed=st.integers(0, 100_000), n_sites=st.integers(2, 48),
+           n_tiers=st.integers(1, 7), n_jobs=st.integers(1, 40))
+    @settings(max_examples=40, deadline=None)
+    def test_replay_bit_identical_to_flat(self, seed, n_sites, n_tiers, n_jobs):
+        """Sequential replay: per-row queue feedback must stay exact
+        through the tier-pruned path, including the pack write-back."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, n_sites)
+        w = _weights(rng)
+        tiers = _skewed_tiers(rng, list(sites), n_tiers)
+        jobs = _jobs(rng, n_jobs)
+        spA = SitePack.from_scheduler(sites, links)
+        spB = SitePack.from_scheduler(sites, links)
+        tp = TierPack.from_site_pack(spB, tiers)
+
+        flat = replay_on_pack(JobPack.from_jobs(jobs), spA, w)
+        hier = hier_replay(JobPack.from_jobs(jobs), spB, tp, w)
+
+        assert hier.sites == flat.sites
+        assert list(hier.costs) == list(flat.costs)
+        np.testing.assert_array_equal(spA.queue, spB.queue)
+        np.testing.assert_array_equal(spA.work, spB.work)
+
+    def test_degenerate_single_tier_is_flat(self):
+        """One tier = the whole grid: the bound stage is vacuous and
+        the refinement IS the dense pass — a structural sanity pin."""
+        rng = np.random.default_rng(5)
+        sites, links = _grid(rng, 24, dead_fraction=0.0)
+        w = _weights(rng)
+        sp = SitePack.from_scheduler(sites, links)
+        jp = JobPack.from_jobs(_jobs(rng, 30))
+        tp = TierPack.from_site_pack(sp, None)       # None → one tier
+
+        assert len(tp.labels) == 1
+        flat = batched_argmin(batched_cost_matrix(jp, sp, w), sp)
+        hier = hier_select(jp, sp, tp, w)
+        assert hier.sites == flat.sites
+        assert list(hier.costs) == list(flat.costs)
+
+    @given(seed=st.integers(0, 100_000))
+    @settings(max_examples=25, deadline=None)
+    def test_scheduler_hier_mode_matches_flat(self, seed):
+        """The public DianaScheduler surface: mode='hier' with a real
+        GridTopology must commit identical placements and site state."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 20, dead_fraction=0.1)
+        names = sorted(sites)
+        topo = GridTopology()
+        for i, n in enumerate(names):
+            topo.join(f"root{i % 4}", Node(name=n))
+        jobs = _jobs(rng, 25)
+
+        dA = DianaScheduler(copy.deepcopy(sites), dict(links))
+        dB = DianaScheduler(copy.deepcopy(sites), dict(links), topology=topo)
+        jA, jB = copy.deepcopy(jobs), copy.deepcopy(jobs)
+        a = dA.place_batch(jA)
+        b = dB.place_batch(jB, mode="hier")
+
+        assert a.sites == b.sites
+        assert list(a.costs) == list(b.costs)
+        for n in names:
+            assert dA.sites[n].queue_length == dB.sites[n].queue_length
+            assert dA.sites[n].waiting_work == dB.sites[n].waiting_work
+
+    def test_bad_mode_rejected(self):
+        rng = np.random.default_rng(0)
+        sites, links = _grid(rng, 4, dead_fraction=0.0)
+        d = DianaScheduler(sites, links)
+        with pytest.raises(ValueError):
+            d.select_sites_batch(_jobs(rng, 2), mode="tiered")
+        with pytest.raises(ValueError):
+            d.place_batch(_jobs(rng, 2), mode="tiered")
+
+
+class TestTierPackRefresh:
+    @given(seed=st.integers(0, 100_000), n_sites=st.integers(3, 40),
+           n_tiers=st.integers(1, 6), n_dirty=st.integers(1, 10))
+    @settings(max_examples=30, deadline=None)
+    def test_narrowed_refresh_matches_rebuild(self, seed, n_sites, n_tiers,
+                                              n_dirty):
+        """Mutate static link/capacity state at a few columns, then a
+        narrowed ``refresh(cols)`` must leave the pack identical to one
+        rebuilt from scratch — the dirty-column interleaving the P2P
+        cache relies on."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, n_sites)
+        tiers = _skewed_tiers(rng, list(sites), n_tiers)
+        sp = SitePack.from_scheduler(sites, links)
+        tp = TierPack.from_site_pack(sp, tiers)
+
+        dirty = rng.choice(n_sites, size=min(n_dirty, n_sites), replace=False)
+        for c in dirty:
+            sp.bw[c] = float(rng.uniform(1e6, 1e10))
+            sp.loss[c] = float(rng.uniform(0, 0.05))
+            sp.rtt[c] = float(rng.uniform(0.001, 0.3))
+            sp.cap[c] = float(rng.integers(10, 2000))
+        tp.refresh(sp, np.asarray(dirty, np.int64))
+        fresh = TierPack.from_site_pack(sp, tiers)
+
+        for f in ("net64", "eff64", "net32", "eff32", "cap32",
+                  "net_min", "eff_max", "eff_min", "cap_max", "cap_min"):
+            np.testing.assert_array_equal(getattr(tp, f), getattr(fresh, f),
+                                          err_msg=f)
+
+    @given(seed=st.integers(0, 100_000))
+    @settings(max_examples=20, deadline=None)
+    def test_refresh_interleaved_with_selection(self, seed):
+        """refresh → select must equal a fresh pack's select (the
+        sequence the P2P hier cache performs every merge round)."""
+        rng = np.random.default_rng(seed)
+        sites, links = _grid(rng, 24)
+        w = _weights(rng)
+        tiers = _skewed_tiers(rng, list(sites), 4)
+        sp = SitePack.from_scheduler(sites, links)
+        tp = TierPack.from_site_pack(sp, tiers)
+        jp = JobPack.from_jobs(_jobs(rng, 15))
+
+        hier_select(jp, sp, tp, w)                   # warm pass
+        dirty = rng.choice(24, size=5, replace=False)
+        for c in dirty:
+            sp.bw[c] = float(rng.uniform(1e6, 1e10))
+            sp.loss[c] = float(rng.uniform(0, 0.05))
+        tp.refresh(sp, np.asarray(dirty, np.int64))
+
+        flat = batched_argmin(batched_cost_matrix(jp, sp, w), sp)
+        hier = hier_select(jp, sp, tp, w)
+        assert hier.sites == flat.sites
+        assert list(hier.costs) == list(flat.costs)
+
+
+class TestLazyMigration:
+    @given(seed=st.integers(0, 100_000), n_jobs=st.integers(1, 25),
+           n_peers=st.integers(1, 20))
+    @settings(max_examples=40, deadline=None)
+    def test_lazy_targets_match_dense(self, seed, n_jobs, n_peers):
+        rng = np.random.default_rng(seed)
+        cost = rng.uniform(0, 100, (n_jobs, n_peers))
+        cost[rng.uniform(size=cost.shape) < 0.1] = np.inf
+        ja = rng.integers(0, 6, (n_jobs, n_peers)).astype(float)
+        lcost = rng.uniform(0, 100, n_jobs)
+        lja = rng.integers(0, 6, n_jobs).astype(float)
+        pinned = rng.uniform(size=n_jobs) < 0.2
+        excluded = rng.uniform(size=n_peers) < 0.3
+
+        touched = np.zeros(n_peers, bool)
+
+        def cost_cols(cols):
+            touched[cols] = True
+            return cost[:, cols]
+
+        if excluded.all():
+            m1, b1 = select_peer_targets(pinned, lja, lcost, excluded, ja, cost)
+            m2, b2, _ = select_peer_targets_lazy(
+                pinned, lja, lcost, excluded, ja, cost_cols)
+            np.testing.assert_array_equal(m1, m2)
+            return
+
+        m1, b1 = select_peer_targets(pinned, lja, lcost, excluded, ja, cost)
+        m2, b2, bc = select_peer_targets_lazy(
+            pinned, lja, lcost, excluded, ja, cost_cols)
+        np.testing.assert_array_equal(m1, m2)
+        np.testing.assert_array_equal(b1, b2)
+        rows = np.arange(n_jobs)
+        # best-cost column is exact wherever a migration fires
+        np.testing.assert_array_equal(bc[m2], cost[rows, b2][m2])
+        # laziness is real: only min-jobsAhead candidate columns read
+        ja_m = np.where(excluded[None, :], np.inf, ja)
+        cand = (ja_m == ja_m.min(axis=1)[:, None]).any(axis=0)
+        assert not touched[~cand].any()
+
+    @given(seed=st.integers(0, 100_000), n_jobs=st.integers(0, 20))
+    @settings(max_examples=25, deadline=None)
+    def test_select_peers_batch_lazy_reasons_match(self, seed, n_jobs):
+        """The decision-object surface: reason strings through the lazy
+        path must be character-identical to the dense path."""
+        rng = np.random.default_rng(seed)
+        n_peers = int(rng.integers(1, 12))
+        names = [f"p{i}" for i in range(n_peers)]
+        local = names[int(rng.integers(0, n_peers))]
+        cost = rng.uniform(0, 50, (n_jobs, n_peers))
+        ja = rng.integers(0, 4, (n_jobs, n_peers)).astype(float)
+        lcost = rng.uniform(0, 50, n_jobs)
+        lja = rng.integers(0, 4, n_jobs).astype(float)
+        alive = rng.uniform(size=n_peers) > 0.25
+        jobs = [Job(user="u", migrated=bool(rng.uniform() < 0.2))
+                for _ in range(n_jobs)]
+
+        dense = select_peers_batch(
+            jobs, local, lja, lcost, names, ja, cost, alive=alive)
+        lazy = select_peers_batch(
+            jobs, local, lja, lcost, names, ja, alive=alive,
+            cost_cols=lambda cols: cost[:, cols])
+        assert [(d.migrate, d.target, d.reason) for d in dense] == \
+               [(d.migrate, d.target, d.reason) for d in lazy]

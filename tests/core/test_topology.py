@@ -62,3 +62,71 @@ def test_leave_updates_table():
     topo.join("cern", Node(name="n1"))
     topo.leave("cern", "n1")
     assert "n1" not in topo.rootgrids["cern"].node_table
+
+
+def test_join_conflicting_nearest_raises():
+    """A site with its own RootGrid routed at a *different* RootGrid
+    via ``nearest`` is a conflict, not a silent ignore."""
+    import pytest
+
+    topo = GridTopology()
+    topo.join("cern", Node(name="n0"))
+    topo.join("fnal", Node(name="f0"))
+    with pytest.raises(ValueError):
+        topo.join("cern", Node(name="n1"), nearest="fnal")
+
+
+def test_join_own_rootgrid_wins_over_redundant_nearest():
+    """nearest naming the site's own RootGrid is redundant, not a
+    conflict."""
+    topo = GridTopology()
+    topo.join("cern", Node(name="n0"))
+    root = topo.join("cern", Node(name="n1"), nearest="cern")
+    assert root.site == "cern"
+    assert "n1" in root.node_table
+
+
+def test_join_picks_least_loaded_subgrid():
+    topo = GridTopology()
+    root = topo.join("cern", Node(name="n0"))
+    from repro.core.topology import SubGrid
+
+    root.register(SubGrid(name="cern/sg1"))
+    # sg0 holds n0; the empty sg1 must win, then they alternate
+    topo.join("cern", Node(name="n1"))
+    assert "n1" in root.subgrids["cern/sg1"].nodes
+    topo.join("cern", Node(name="n2"))
+    sizes = sorted(len(sg.nodes) for sg in root.subgrids.values())
+    assert sizes == [1, 2] or sizes == [2, 1]
+
+
+def test_node_uids_deterministic_per_topology():
+    """Two topologies built the same way assign the same uids — and
+    never reuse one within a topology."""
+    def build():
+        topo = GridTopology()
+        uids = []
+        for i in range(6):
+            n = Node(name=f"n{i}")
+            topo.join(f"site{i % 2}", n)
+            uids.append(n.uid)
+        return uids
+
+    a, b = build(), build()
+    assert a == b
+    assert len(set(a)) == len(a)
+    assert 0 not in a            # the unset sentinel never survives join
+
+
+def test_tier_index_mirrors_rootgrids():
+    topo = GridTopology()
+    topo.join("east", Node(name="s0"))
+    topo.join("east", Node(name="s1"))
+    topo.join("west", Node(name="s2"))
+    names = ["s0", "s1", "s2", "loner"]
+    assert topo.tier_of("s1") == "east"
+    assert topo.tier_of("loner") == "loner"        # singleton fallback
+    members = topo.tier_members(names)
+    assert members["east"] == ["s0", "s1"]
+    assert members["west"] == ["s2"]
+    assert members["loner"] == ["loner"]

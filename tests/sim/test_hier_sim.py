@@ -1,0 +1,175 @@
+"""SimConfig(placement="hier") end-to-end equivalence.
+
+Whole-run bit-identity: the same workload through ``placement="hier"``
+and ``placement="flat"`` must produce identical event streams — exec
+sites, finish times, migration counts — on both simulators and both
+run loops, with topologies, dead sites and dense bursts in play.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import GridTopology, NetworkLink, Node
+from repro.sim import GridSim, P2PGridSim, SimConfig
+from repro.sim.faults import FaultPlan
+from repro.sim.workloads import SimJob
+
+
+def _grid(rng, n_sites):
+    names = [f"s{i:02d}" for i in range(n_sites)]
+    spec = {n: int(rng.integers(1, 5)) for n in names}
+    links = {}
+    for a in names:
+        for b in names:
+            links[(a, b)] = NetworkLink(
+                bandwidth_Bps=float(rng.uniform(1e6, 1e8)),
+                loss_rate=0.0 if a == b else float(rng.uniform(0.0, 0.02)),
+                rtt_s=float(rng.uniform(0.01, 0.3)),
+            )
+    return names, spec, links
+
+
+def _topology(names, n_tiers):
+    topo = GridTopology()
+    for i, n in enumerate(names):
+        topo.join(f"root{i % n_tiers}", Node(name=n))
+    return topo
+
+
+def _workload(rng, names, n=300):
+    S = len(names)
+    return [
+        SimJob(
+            user=("hog" if i % 5 == 0 else f"u{i % 7}"),
+            arrival=float(i // 8) * 5.0,
+            work=float(rng.integers(10, 600)),
+            input_bytes=float(rng.choice([0.0, 1e6, 5e9])),
+            output_bytes=float(rng.choice([0.0, 2e8])),
+            data_site=(names[i % S] if i % 3 else None),
+            origin_site=names[(i * 7) % S],
+        )
+        for i in range(n)
+    ]
+
+
+def _trace(result):
+    return [
+        (j.user, j.arrival, j.exec_site, j.start, j.finish,
+         j.migrated, j.requeues)
+        for j in result.jobs
+    ]
+
+
+class TestHierSimEquivalence:
+    def _run(self, cls, spec, links, jobs, placement, topo, horizon, **kw):
+        cfg = SimConfig(
+            policy="diana", placement=placement, topology=topo,
+            migration_interval_s=30.0, congestion_window_s=120.0,
+            horizon=horizon, **kw,
+        )
+        sim = cls(dict(spec), links=dict(links), config=cfg)
+        return sim.run(copy.deepcopy(jobs))
+
+    @pytest.mark.parametrize("horizon", [True, False])
+    def test_gridsim_hier_matches_flat(self, horizon):
+        rng = np.random.default_rng(7)
+        names, spec, links = _grid(rng, 24)
+        topo = _topology(names, 4)
+        jobs = _workload(rng, names)
+        rf = self._run(GridSim, spec, links, jobs, "flat", topo, horizon)
+        rh = self._run(GridSim, spec, links, jobs, "hier", topo, horizon)
+        assert _trace(rf) == _trace(rh)
+        assert rf.migrations() == rh.migrations()
+        assert rh.migrations() > 0           # the §IX path actually ran
+
+    @pytest.mark.parametrize("horizon", [True, False])
+    def test_p2p_hier_matches_flat(self, horizon):
+        rng = np.random.default_rng(9)
+        names, spec, links = _grid(rng, 20)
+        topo = _topology(names, 4)
+        jobs = _workload(rng, names)
+        kw = dict(num_peers=5, exchange_interval_s=60.0)
+        rf = self._run(P2PGridSim, spec, links, jobs, "flat", topo, horizon, **kw)
+        rh = self._run(P2PGridSim, spec, links, jobs, "hier", topo, horizon, **kw)
+        assert _trace(rf) == _trace(rh)
+        assert rf.migrations() == rh.migrations()
+
+    def test_hier_with_site_faults_matches_flat(self):
+        """Dead columns change which tiers can win — the poisoning must
+        flow through the bounds exactly like the flat inf-mask."""
+        rng = np.random.default_rng(11)
+        names, spec, links = _grid(rng, 16)
+        topo = _topology(names, 3)
+        jobs = _workload(rng, names, n=250)
+        plan = FaultPlan()
+        plan.site_down(20.0, names[3]); plan.site_up(120.0, names[3])
+        plan.site_down(50.0, names[7]); plan.site_up(300.0, names[7])
+        rf = self._run(GridSim, spec, links, jobs, "flat", topo, True,
+                       fault_plan=copy.deepcopy(plan))
+        rh = self._run(GridSim, spec, links, jobs, "hier", topo, True,
+                       fault_plan=copy.deepcopy(plan))
+        assert _trace(rf) == _trace(rh)
+
+    def test_hier_without_topology_is_single_tier(self):
+        """No topology ⇒ one tier over the whole grid; still identical."""
+        rng = np.random.default_rng(13)
+        names, spec, links = _grid(rng, 12)
+        jobs = _workload(rng, names, n=150)
+        rf = self._run(GridSim, spec, links, jobs, "flat", None, True)
+        rh = self._run(GridSim, spec, links, jobs, "hier", None, True)
+        assert _trace(rf) == _trace(rh)
+
+    def test_invalid_placement_rejected(self):
+        rng = np.random.default_rng(0)
+        _, spec, links = _grid(rng, 4)
+        with pytest.raises(ValueError):
+            GridSim(spec, links=links, config=SimConfig(placement="tiered"))
+
+    def test_invalidate_links_rebuilds_hier_aggregates(self):
+        """Swapping the link table must drop the tier aggregates with
+        the dense matrices — stale bounds would silently misprune."""
+        rng = np.random.default_rng(17)
+        names, spec, links = _grid(rng, 12)
+        topo = _topology(names, 3)
+        jobs = _workload(rng, names, n=120)
+        cfg = SimConfig(policy="diana", placement="hier", topology=topo)
+        sim = GridSim(dict(spec), links=dict(links), config=cfg)
+        assert sim._hier_ready() and sim._h_perm is not None
+        _, spec2, links2 = _grid(rng, 12)
+        sim.links = links2                       # setter → invalidate_links
+        assert sim._h_perm is None
+        # and a fresh flat sim over the new table still agrees
+        rh = sim.run(copy.deepcopy(jobs))
+        flat = GridSim(dict(spec), links=dict(links2),
+                       config=SimConfig(policy="diana", placement="flat",
+                                        topology=topo))
+        rf = flat.run(copy.deepcopy(jobs))
+        assert _trace(rh) == _trace(rf)
+
+
+class TestGossipSummaries:
+    def test_summaries_flow_and_account(self):
+        rng = np.random.default_rng(3)
+        names, spec, links = _grid(rng, 12)
+        topo = _topology(names, 3)
+        jobs = _workload(rng, names, n=120)
+        cfg = SimConfig(policy="diana", topology=topo, num_peers=6,
+                        exchange_interval_s=20.0, gossip_summaries=True)
+        sim = P2PGridSim(dict(spec), links=dict(links), config=cfg)
+        res = sim.run(copy.deepcopy(jobs))
+        st = sim.exchange.stats.as_dict()
+        assert st["summaries_sent"] > 0
+        # every peer ends up knowing about remote tiers
+        assert max(len(p.tier_summaries) for p in sim.peers) >= 2
+        assert res.finished == len(jobs)
+
+    def test_summaries_off_by_default(self):
+        rng = np.random.default_rng(4)
+        names, spec, links = _grid(rng, 8)
+        topo = _topology(names, 2)
+        cfg = SimConfig(policy="diana", topology=topo, num_peers=4,
+                        exchange_interval_s=20.0)
+        sim = P2PGridSim(dict(spec), links=dict(links), config=cfg)
+        sim.run(copy.deepcopy(_workload(rng, names, n=60)))
+        assert sim.exchange.stats.as_dict()["summaries_sent"] == 0
